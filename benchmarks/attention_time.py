@@ -1,0 +1,62 @@
+"""Paper Fig. 9 / Table 1: attention compute time, Flash2 vs DistrAttention.
+
+CPU wall time is not TPU time, so this reports BOTH:
+  us        — measured XLA-CPU wall time (relative trend),
+  derived   — MXU-FLOP ratio from the kernel cost model and the projected
+              v5e score-stage time (the roofline-honest comparison).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AttentionConfig, DistrConfig, attend
+from repro.kernels.ops import attention_cost
+from repro.roofline.analysis import PEAK_FLOPS
+from benchmarks.common import save_result, timeit
+
+B, H = 1, 10  # paper §4.5: batch 1, 10 heads
+
+
+def run() -> list[tuple]:
+    rows, records = [], []
+    for d in (32, 64, 128):
+        for n in (1024, 2048, 4096):
+            q = jax.random.normal(jax.random.PRNGKey(0), (B, H, n, d), jnp.float32)
+            k = jax.random.normal(jax.random.PRNGKey(1), (B, H, n, d), jnp.float32)
+            v = jax.random.normal(jax.random.PRNGKey(2), (B, H, n, d), jnp.float32)
+
+            flash_cfg = AttentionConfig(impl="xla_flash", block_q=128, block_k=128)
+            flash = jax.jit(functools.partial(attend, cfg=flash_cfg, causal=True))
+            t_flash = timeit(flash, q, k, v)
+
+            for g in (2, 4):
+                if d // g < 16:
+                    continue  # paper §4.5 skips d=32, G*=4 (tensor-core floor)
+                cfg = AttentionConfig(
+                    impl="distr",
+                    distr=DistrConfig(group_size=g, block_q=128, block_k=128),
+                )
+                distr = jax.jit(functools.partial(attend, cfg=cfg, causal=True))
+                t_distr = timeit(distr, q, k, v)
+
+                c_f = attention_cost(B, H, n, n, d, causal=True)
+                c_d = attention_cost(B, H, n, n, d, causal=True, group_size=g)
+                mxu_ratio = c_d["mxu_flops"] / c_f["mxu_flops"]
+                v5e_flash_us = c_f["mxu_flops"] / PEAK_FLOPS * 1e6
+                v5e_distr_us = c_d["mxu_flops"] / PEAK_FLOPS * 1e6
+                rec = dict(
+                    d=d, n=n, g=g, cpu_flash_us=t_flash, cpu_distr_us=t_distr,
+                    mxu_flops_ratio=mxu_ratio,
+                    v5e_flash_us=v5e_flash_us, v5e_distr_us=v5e_distr_us,
+                )
+                records.append(rec)
+                rows.append((
+                    f"attn_time/d={d}/n={n}/G={g}", t_distr,
+                    f"flash_cpu={t_flash:.0f}us mxu_ratio={mxu_ratio:.3f} "
+                    f"v5e_proj={v5e_distr_us:.1f}us_vs_{v5e_flash_us:.1f}us",
+                ))
+    save_result("attention_time", records)
+    return rows

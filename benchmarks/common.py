@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing, CSV rows, result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
+    """Median wall time (µs) of a jitted callable (CPU wall clock)."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def save_result(name: str, rows: list[dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def emit(rows: list[tuple]) -> None:
+    """Print the run.py CSV contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""Beyond-paper: fused-K̂ decode cache (serve.kv_cache) — KV-read bytes per
+decode step and score fidelity vs the exact cache (EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import grouping
+from repro.serve import kv_cache
+from benchmarks.common import save_result
+
+
+def run() -> list[tuple]:
+    rows, records = [], []
+    cfg = get_config("qwen2.5-32b")  # full dims; math only, tiny arrays below
+    dh, hkv, hq = cfg.head_dim_, cfg.n_kv_heads, cfg.n_heads
+    for g in (2, 4):
+        # bytes read per cached token per decode step (per layer, kv head):
+        # exact reads K+V; fused reads K̂+V (raw K stays cold for the score
+        # stage and is only touched at eviction/rescoring).
+        exact_bytes = 2 * dh * 2  # K + V bf16
+        fused_bytes = (dh // g) * 2 + dh * 2  # K̂ bf16 + V bf16
+        saving = 1 - fused_bytes / exact_bytes
+
+        # fidelity on gaussian K/q with a static permutation
+        perms = jax.random.permutation(jax.random.PRNGKey(0), dh)[None]
+        perms = jnp.broadcast_to(perms, (hkv, dh)).astype(jnp.int32)
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, hkv, 512, dh))
+        q = jax.random.normal(jax.random.PRNGKey(2), (1, hq, 1, dh))
+        k_f = grouping.fuse_columns(k.astype(jnp.float32), perms[None], g)
+        q_s = kv_cache.sample_q(q, perms, g, hq // hkv)
+        rep = hq // hkv
+        s_apx = jnp.einsum("bhnd,bhmd->bhnm", q_s, jnp.repeat(k_f, rep, 1))
+        s_ext = jnp.einsum("bhnd,bhmd->bhnm", q, jnp.repeat(k, rep, 1))
+        corr = float(jnp.corrcoef(
+            jnp.stack([s_apx.reshape(-1), s_ext.reshape(-1)])
+        )[0, 1])
+        records.append(dict(g=g, kv_byte_saving=saving, score_corr=corr))
+        rows.append((
+            f"distr_decode/G={g}", 0.0,
+            f"kv_read_saving={saving*100:.1f}% score_corr={corr:.3f}",
+        ))
+    save_result("distr_decode", records)
+    return rows

@@ -1,0 +1,30 @@
+"""Inject the generated roofline table into EXPERIMENTS.md (idempotent)."""
+import os
+import re
+
+from benchmarks.roofline_table import table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+MARK = "<!-- ROOFLINE_TABLE -->"
+BEGIN = "<!-- ROOFLINE_TABLE_BEGIN -->"
+END = "<!-- ROOFLINE_TABLE_END -->"
+
+
+def main() -> None:
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    tbl = f"{BEGIN}\n{table('16x16')}\n{END}"
+    if BEGIN in text:
+        text = re.sub(
+            re.escape(BEGIN) + r".*?" + re.escape(END), tbl, text, flags=re.S
+        )
+    else:
+        text = text.replace(MARK, tbl)
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md table updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table 6: LM prefill time-to-first-token at varying prompt lengths,
+exact vs DistrAttention (reduced llama-like config on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.serve_step import make_prefill
+from benchmarks.common import save_result, timeit
+
+
+def run() -> list[tuple]:
+    rows, records = [], []
+    base = get_config("qwen1.5-4b", reduced=True).replace(
+        n_layers=4, compute_dtype="float32"
+    )
+    params = lm.init_params(jax.random.PRNGKey(0), base)
+    for impl in ("xla_flash", "distr"):
+        cfg = base.replace(attention=base.attention.with_impl(impl))
+        for n in (256, 512, 1024, 2048):
+            toks = jax.random.randint(jax.random.PRNGKey(1), (1, n), 0, cfg.vocab)
+            prefill = jax.jit(make_prefill(cfg, n))
+            us = timeit(prefill, params, toks, warmup=1, iters=3)
+            records.append(dict(impl=impl, n=n, us=us))
+            rows.append((f"ttft/{impl}/n={n}", us, f"prefill_tokens={n}"))
+    save_result("llama_ttft", records)
+    return rows

@@ -1,0 +1,37 @@
+"""Paper §4.8: cost of the LSH-based grouping stage relative to the full
+attention computation, across sequence lengths."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AttentionConfig, DistrConfig, attend
+from repro.core.distr_attention import compute_block_permutations
+from benchmarks.common import save_result, timeit
+
+D, H = 128, 4
+
+
+def run() -> list[tuple]:
+    rows, records = [], []
+    cfg = DistrConfig(group_size=2, block_q=128, block_k=128)
+    attn_cfg = AttentionConfig(impl="distr", distr=cfg)
+    for n in (2048, 4096, 8192):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, H, n, D), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, H, n, D), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, H, n, D), jnp.float32)
+
+        group_fn = jax.jit(functools.partial(compute_block_permutations, cfg=cfg))
+        t_group = timeit(group_fn, q)
+        full_fn = jax.jit(functools.partial(attend, cfg=attn_cfg, causal=True))
+        t_full = timeit(full_fn, q, k, v)
+        frac = t_group / t_full * 100
+        records.append(dict(n=n, group_us=t_group, total_us=t_full, pct=frac))
+        rows.append((
+            f"lsh_grouping/n={n}", t_group,
+            f"total={t_full:.0f}us share={frac:.1f}%",
+        ))
+    save_result("lsh_grouping", records)
+    return rows

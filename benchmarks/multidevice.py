@@ -1,0 +1,68 @@
+"""Paper Table 9: multi-device attention, Flash2 vs DistrAttention.
+
+Runs in a subprocess with 8 forced host devices; the attention workload is
+sharded over a data mesh of 1/2/4/8 devices (paper: 1/2/4 GPUs) and timed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import save_result
+
+_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json, functools, time
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import attend, AttentionConfig, DistrConfig
+from benchmarks.common import timeit
+
+B, H, N, D = 8, 8, 2048, 128
+q = jax.random.normal(jax.random.PRNGKey(0), (B, H, N, D), jnp.float32)
+k = jax.random.normal(jax.random.PRNGKey(1), (B, H, N, D), jnp.float32)
+v = jax.random.normal(jax.random.PRNGKey(2), (B, H, N, D), jnp.float32)
+
+flash = functools.partial(
+    attend, cfg=AttentionConfig(impl="xla_flash"), causal=True)
+distr = functools.partial(
+    attend,
+    cfg=AttentionConfig(impl="distr", distr=DistrConfig(group_size=2)),
+    causal=True)
+
+out = []
+for ndev in (1, 2, 4, 8):
+    mesh = jax.sharding.Mesh(jax.devices()[:ndev], ("data",))
+    sh = NamedSharding(mesh, P("data"))
+    qs, ks, vs = (jax.device_put(x, sh) for x in (q, k, v))
+    with jax.sharding.set_mesh(mesh):
+        t_f = timeit(jax.jit(flash), qs, ks, vs, warmup=1, iters=3)
+        t_d = timeit(jax.jit(distr), qs, ks, vs, warmup=1, iters=3)
+    out.append(dict(devices=ndev, flash_us=t_f, distr_us=t_d,
+                    speedup=t_f / t_d))
+print("JSON:" + json.dumps(out))
+"""
+
+
+def run() -> list[tuple]:
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = textwrap.dedent(_SCRIPT).format(src=os.path.abspath(src))
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=560)
+    rows = []
+    if res.returncode != 0:
+        rows.append(("multidevice/FAILED", 0.0, res.stderr[-200:]))
+        return rows
+    records = json.loads(res.stdout.split("JSON:")[1])
+    save_result("multidevice", records)
+    for r in records:
+        rows.append((
+            f"multidevice/devices={r['devices']}", r["distr_us"],
+            f"flash={r['flash_us']:.0f}us speedup={r['speedup']:.2f}x",
+        ))
+    return rows

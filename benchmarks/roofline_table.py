@@ -1,0 +1,86 @@
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+ARCH_ORDER = [
+    "minicpm-2b", "starcoder2-7b", "qwen2.5-32b", "qwen1.5-4b",
+    "whisper-small", "internvl2-2b", "llama4-scout-17b-a16e",
+    "deepseek-v2-236b", "zamba2-7b", "mamba2-130m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = "") -> dict:
+    recs = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        name = os.path.basename(path)[:-5]
+        if r.get("mesh") != mesh:
+            continue
+        # normalise: the attention-free arch records carry an impl suffix
+        base = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        norm = name.replace("_reference", "")
+        want = f"{base}_{tag}" if tag else base
+        if norm != want:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def table(mesh: str, tag: str = "") -> str:
+    recs = load(mesh, tag)
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant "
+        "| useful-FLOPs | mem/dev GiB (TPU est) | status |",
+        "|---|---|---:|---:|---:|---|---:|---:|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                             "skipped (DESIGN.md §4) |")
+                continue
+            if r.get("status") == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | — | — | — | skip |"
+                )
+                continue
+            t = r["roofline"]
+            ratio = r.get("useful_flops_ratio")
+            mem = r["memory"]["per_device_total"] / 2**30
+            est = r["tpu_memory_estimate"]["total"] / 2**30
+            lines.append(
+                f"| {arch} | {shape} | {fmt_ms(t['compute_s'])} | "
+                f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} | "
+                f"{t['dominant']} | "
+                f"{ratio:.3f} | {mem:.1f} ({est:.1f}) | ok |"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(table(args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

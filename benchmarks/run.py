@@ -1,0 +1,59 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Results are also persisted as
+JSON under benchmarks/results/ for EXPERIMENTS.md.
+
+  T1/Fig9  attention_time   — Flash2 vs DistrAttention compute time
+  T2       blocksize        — (l, m) selection rule vs exhaustive best
+  T3/T4    errors           — Ŝ error vs block size / sampling rate
+  T5/T7/T8 compare          — ours vs Hydra/Flatten/Primal/Hyper fidelity+time
+  T6       llama_ttft       — LM prefill TTFT, exact vs distr
+  T9       multidevice      — sharded attention on 1/2/4/8 devices
+  Fig8     accuracy_train   — training-loss trajectories exact vs distr
+  §4.8     lsh_grouping     — LSH grouping share of attention time
+  extra    distr_decode     — beyond-paper fused-K̂ decode cache
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = [
+    "errors",
+    "blocksize",
+    "attention_time",
+    "compare",
+    "llama_ttft",
+    "lsh_grouping",
+    "accuracy_train",
+    "multidevice",
+    "distr_decode",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {BENCHES}")
+    args = ap.parse_args()
+    names = args.only or BENCHES
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run()
+            for row_name, us, derived in rows:
+                print(f"{row_name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

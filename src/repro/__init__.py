@@ -1,0 +1,7 @@
+"""repro — DistrAttention (Jin et al., 2025) as a production JAX/TPU framework.
+
+Layers: core (the paper's algorithm) · kernels (Pallas TPU) · models ·
+configs · distributed · train · serve · launch · roofline.
+"""
+
+__version__ = "1.0.0"

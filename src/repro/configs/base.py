@@ -1,0 +1,202 @@
+"""Model / shape configuration system.
+
+One ``ModelConfig`` covers every assigned architecture family (dense GQA,
+MoE, MLA, SSM, hybrid, enc-dec) via optional field groups; each
+``configs/<arch>.py`` instantiates the exact published dims plus a
+``reduced()`` variant for CPU smoke tests.
+
+Shapes (assignment): train_4k, prefill_32k, decode_32k, long_500k.  The
+decode shapes lower ``serve_step`` (1 token vs a seq_len KV cache);
+``long_500k`` only applies to sub-quadratic archs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import AttentionConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec
+    # transformer trunk
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    pos: str = "rope"  # rope | learned | none
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # attention implementation (the paper's technique lives here)
+    attention: AttentionConfig = field(default_factory=AttentionConfig)
+    # distribution strategy hints (resolved by repro.distributed.sharding)
+    attn_shard: str = "heads"  # heads | seq — seq when heads % tp != 0
+    fsdp: bool = True  # shard params/optimizer over the data axis too
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_impl: str = "auto"  # auto | dense_onehot | ep_a2a | ep_psum
+    # MLA (deepseek)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    attn_every: int = 0  # hybrid: shared attn block after every k ssm layers
+    n_shared_attn_blocks: int = 2
+    # encoder-decoder / multimodal stubs
+    n_encoder_layers: int = 0
+    frontend: str | None = None  # audio_stub | patch_stub
+    num_patch_tokens: int = 256  # vlm: image tokens per sample
+    cross_len: int = 1500  # enc output length seen by decode shapes
+    learned_pos_len: int = 32768  # table size when pos == "learned"
+    # numerics & training
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"  # full | dots | none
+    schedule: str = "cosine"  # cosine | wsd
+    max_seq_len: int = 532480
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 so the embedding/LM-head shard over the
+        16-way model axis (and stay MXU-tile aligned).  Padded logits are
+        masked to -inf in logits_fn; padded rows receive no gradient signal
+        beyond weight decay."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def qk_head_dim(self) -> int:
+        if self.use_mla:
+            return self.qk_nope_dim + self.qk_rope_dim
+        return self.head_dim_
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def d_inner(self) -> int:  # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- shape applicability (DESIGN.md §4) ---------------------------
+    def supports_shape(self, shape: ShapeSpec) -> bool:
+        if shape.name == "long_500k":
+            # needs sub-quadratic sequence handling
+            return self.family in ("ssm", "hybrid")
+        return True
+
+    def skip_reason(self, shape: ShapeSpec) -> str | None:
+        if self.supports_shape(shape):
+            return None
+        return (
+            "long_500k requires sub-quadratic attention; "
+            f"{self.name} is a pure softmax-attention arch (see DESIGN.md §4)"
+        )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    train  → token/label batches (+ stub frontend embeddings).
+    prefill→ token batch (serve prefill lowering).
+    decode → one-token batch; KV-cache specs come from repro.serve.kv_cache.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.bfloat16
+
+    def tok(n):
+        return jax.ShapeDtypeStruct((b, n), i32)
+
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": tok(s),
+                "labels": tok(s),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": tok(s),
+            }
+        return {"tokens": tok(1)}  # decode: cache specs added by serve layer
+
+    if cfg.frontend == "patch_stub":
+        npatch = min(cfg.num_patch_tokens, s // 2)
+        ntext = s - npatch
+        if shape.kind == "train":
+            return {
+                "patches": jax.ShapeDtypeStruct((b, npatch, cfg.d_model), f32),
+                "tokens": tok(ntext),
+                "labels": tok(ntext),
+            }
+        if shape.kind == "prefill":
+            return {
+                "patches": jax.ShapeDtypeStruct((b, npatch, cfg.d_model), f32),
+                "tokens": tok(ntext),
+            }
+        return {"tokens": tok(1)}
+
+    if shape.kind == "train":
+        return {"tokens": tok(s), "labels": tok(s)}
+    if shape.kind == "prefill":
+        return {"tokens": tok(s)}
+    return {"tokens": tok(1)}

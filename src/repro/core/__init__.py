@@ -1,0 +1,22 @@
+"""DistrAttention core — the paper's contribution as composable JAX modules."""
+from repro.core.api import IMPLS, AttentionConfig, attend
+from repro.core.distr_attention import DistrConfig, distr_attention, distr_scores
+from repro.core.flash_reference import (
+    blockwise_flash_reference,
+    reference_attention,
+)
+from repro.core import block_size, grouping, lsh
+
+__all__ = [
+    "IMPLS",
+    "AttentionConfig",
+    "DistrConfig",
+    "attend",
+    "block_size",
+    "blockwise_flash_reference",
+    "distr_attention",
+    "distr_scores",
+    "grouping",
+    "lsh",
+    "reference_attention",
+]

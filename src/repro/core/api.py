@@ -1,0 +1,87 @@
+"""Unified attention dispatch — the framework-facing entry point.
+
+``AttentionConfig`` selects the implementation:
+
+  reference    — naive exact softmax oracle
+  xla_flash    — FA-2 blockwise exact, pure JAX (XLA path)
+  distr        — DistrAttention, pure JAX (XLA path; dry-run default)
+  pallas_flash — Pallas TPU FA-2 kernel (interpret=True on CPU)
+  pallas_distr — Pallas TPU DistrAttention kernel (interpret=True on CPU)
+
+Models call :func:`attend` and never touch implementations directly, so a
+single config flag flips an architecture between exact and DistrAttention —
+the paper's "flexibility" knob (speed vs accuracy via group_size).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax.numpy as jnp
+
+from repro.core.distr_attention import DistrConfig, distr_attention
+from repro.core.flash_reference import blockwise_flash_reference, reference_attention
+
+IMPLS = ("reference", "xla_flash", "distr", "pallas_flash", "pallas_distr")
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    impl: str = "xla_flash"
+    distr: DistrConfig = field(default_factory=DistrConfig)
+    # Kernel block sizes for the exact paths (distr block sizes live in
+    # DistrConfig so the paper's (l, m) study has one home).
+    block_q: int = 128
+    block_k: int = 128
+    interpret: bool = True  # Pallas interpret mode (CPU container); False on TPU.
+    # Beyond-paper: serve-side fused-K̂ decode cache under a static
+    # permutation (see serve.kv_cache); cuts K-cache read bytes by 1/G*.
+    distr_decode: bool = False
+
+    def with_impl(self, impl: str) -> "AttentionConfig":
+        return replace(self, impl=impl)
+
+
+def attend(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AttentionConfig,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    kv_mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Multi-head attention with the configured implementation.
+
+    q: (B, Hq, N, d);  k, v: (B, Hkv, Nk, d).
+    """
+    if cfg.impl == "reference":
+        return reference_attention(q, k, v, causal=causal, scale=scale, kv_mask=kv_mask)
+    if cfg.impl == "xla_flash":
+        if kv_mask is not None:
+            # Blockwise path has no kv_mask plumbing; the oracle handles it.
+            return reference_attention(q, k, v, causal=causal, scale=scale, kv_mask=kv_mask)
+        n = q.shape[2]
+        if n < cfg.block_q or n % cfg.block_q or k.shape[2] % cfg.block_k:
+            return reference_attention(q, k, v, causal=causal, scale=scale)
+        return blockwise_flash_reference(
+            q, k, v, block_q=cfg.block_q, block_k=cfg.block_k, causal=causal, scale=scale
+        )
+    if cfg.impl == "distr":
+        return distr_attention(
+            q, k, v, cfg.distr, causal=causal, scale=scale, kv_mask=kv_mask
+        )
+    if cfg.impl == "pallas_flash":
+        from repro.kernels import ops  # deferred: kernels are optional at import
+
+        return ops.flash_attention(
+            q, k, v, causal=causal, scale=scale,
+            block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret,
+        )
+    if cfg.impl == "pallas_distr":
+        from repro.kernels import ops
+
+        return ops.distr_attention(
+            q, k, v, cfg.distr, causal=causal, scale=scale, interpret=cfg.interpret,
+        )
+    raise ValueError(f"unknown attention impl {cfg.impl!r}; choose from {IMPLS}")

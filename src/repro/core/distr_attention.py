@@ -1,0 +1,251 @@
+"""DistrAttention — block-wise grouped-dimension attention (paper §3).
+
+Pure-JAX implementation; this is the XLA path used by the dry-run/roofline so
+``cost_analysis()`` sees true FLOPs.  The Pallas TPU kernel
+(``repro.kernels.distr_attention``) implements the identical math fused.
+
+Structure (paper Fig. 6): Q is split into row-blocks of ``block_q``.  Each
+block hashes its d columns with LSH (over ℝ^block_q), sorts, and derives one
+permutation; the permutation samples the block's Q columns and fuses (sums)
+*every* K row-block it meets — which is exactly why Q is the sampled side:
+one permutation serves the whole inner loop (paper §3.3).
+
+Scores are computed over the reduced dimension d/G*; softmax and the PV
+product are unchanged, so the full N×N context is preserved.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grouping, lsh
+from repro.core.flash_reference import NEG_INF
+
+
+@dataclass(frozen=True)
+class DistrConfig:
+    """The paper's tunables.
+
+    group_size: the sampling rate G* (2, 4, 8, 16).  d_eff = d / G*.
+    block_q / block_k: the (l, m) block sizes of §3.3.1.
+    estimator: "sample" (paper) | "mean" (beyond-paper variant).
+    shared_kv_perm: beyond-paper — derive one permutation per KV group from
+      the mean of its query heads, so fused K̂ is computed once per KV head
+      instead of once per Q head (memory win for GQA; slight error increase).
+    proj_seed: seed for the fixed LSH projection.
+    """
+
+    group_size: int = 2
+    block_q: int = 128
+    block_k: int = 128
+    estimator: str = "sample"
+    shared_kv_perm: bool = False
+    proj_seed: int = 0
+    # "sign_gray" = the paper's hash; "proj_morton" = magnitude-aware variant
+    # (same cost, lower error on positive-orthant data — see core/lsh.py).
+    hash_method: str = "sign_gray"
+
+    def d_eff(self, d: int) -> int:
+        return d // self.group_size
+
+
+def _pad_to_multiple(x: jnp.ndarray, block: int, axis: int) -> tuple[jnp.ndarray, int]:
+    n = x.shape[axis]
+    pad = (-n) % block
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def compute_block_permutations(
+    q: jnp.ndarray, cfg: DistrConfig, proj: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Per-Q-block LSH permutations.
+
+    q: (B, H, N, d) with N divisible by block_q → perms (B, H, nq, d).
+    """
+    b, h, n, d = q.shape
+    nq = n // cfg.block_q
+    if proj is None:
+        proj = lsh.make_projection(jax.random.PRNGKey(cfg.proj_seed), cfg.block_q)
+    blocks = q.reshape(b, h, nq, cfg.block_q, d)
+    return lsh.lsh_permutation(blocks, proj, cfg.hash_method)
+
+
+def distr_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: DistrConfig = DistrConfig(),
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    proj: jnp.ndarray | None = None,
+    kv_mask: jnp.ndarray | None = None,
+    q_exact: jnp.ndarray | None = None,
+    k_exact: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Block-wise DistrAttention.  GQA-aware.
+
+    q: (B, Hq, N, d);  k, v: (B, Hkv, Nk, d), Hq % Hkv == 0.  d_v may differ
+    from d (MLA).
+
+    q_exact / k_exact: optional extra feature slices whose scores are
+    computed exactly (not grouped) and added before the softmax.  Used for
+    MLA's RoPE sub-dimensions, where fusing rows would break the rotation
+    structure (DESIGN.md §4).  Shapes (B, Hq, N, d_e) / (B, Hkv, Nk, d_e).
+    """
+    b, hq, n, d = q.shape
+    dv = v.shape[-1]
+    n_kv = k.shape[1]
+    r = hq // n_kv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    g = cfg.group_size
+    dg = cfg.d_eff(d)
+
+    q, pad_q = _pad_to_multiple(q, cfg.block_q, axis=2)
+    n_padded = q.shape[2]
+    nq = n_padded // cfg.block_q
+    nk = k.shape[2]
+
+    if proj is None:
+        proj = lsh.make_projection(jax.random.PRNGKey(cfg.proj_seed), cfg.block_q)
+
+    # --- Stage 1: per-Q-block permutations (the lightweight LSH stage, §4.8).
+    perms = compute_block_permutations(q, cfg, proj)  # (b, hq, nq, d)
+    if cfg.shared_kv_perm:
+        # One permutation per KV group: hash the mean query block of the group.
+        q_mean = q.reshape(b, n_kv, r, n_padded, d).mean(axis=2)
+        perms = compute_block_permutations(q_mean, cfg, proj)  # (b, hkv, nq, d)
+        perms = jnp.broadcast_to(
+            perms[:, :, None], (b, n_kv, r, nq, d)
+        ).reshape(b, hq, nq, d)
+
+    q_blocks = q.reshape(b, hq, nq, cfg.block_q, d)
+    if cfg.estimator == "sample":
+        q_hat = grouping.sample_columns(q_blocks, perms, g)
+    elif cfg.estimator == "mean":
+        q_hat = grouping.mean_columns(q_blocks, perms, g)
+    else:
+        raise ValueError(f"unknown estimator {cfg.estimator!r}")
+    # (b, hq, nq, block_q, dg)
+
+    # Keep K/V in the compute dtype: fusion gathers at bf16 width and the
+    # einsums accumulate in f32 via preferred_element_type (§Perf iter 1).
+    kf = k
+    vf = v
+    if q_exact is not None:
+        q_exact, _ = _pad_to_multiple(q_exact, cfg.block_q, axis=2)
+        de = q_exact.shape[-1]
+        qe_blocks = q_exact.reshape(b, hq, nq, cfg.block_q, de)
+        kef = k_exact
+
+    def one_q_block(iq, q_hat_blk, perm_blk, qe_blk):
+        """q_hat_blk: (b,hq,block_q,dg); perm_blk: (b,hq,d) → (b,hq,block_q,dv)."""
+        # Fuse K under this block's permutation.  K is per-KV-head; the
+        # permutation is per-Q-head, so fuse in grouped layout.  take_along_axis
+        # broadcasts K's singleton r-axis against the per-Q-head permutations.
+        perm_g = perm_blk.reshape(b, n_kv, r, d)
+        k_hat = grouping.fuse_columns(kf[:, :, None], perm_g, g)
+        # (b, hkv, r, nk, dg) in compute dtype.  Keep the fused keys and the
+        # score rows sharded along the *sequence* axis so a seq-sharded K
+        # never re-gathers inside the Q-block scan; the softmax's row stats
+        # turn into tiny (l,)-vector all-reduces instead (flash-decoding
+        # style) — §Perf iter 4b.
+        from repro.models.layers import constrain as _c
+
+        k_hat = _c(k_hat, "data", None, None, "model", None)
+        qg = q_hat_blk.reshape(b, n_kv, r, cfg.block_q, dg)
+        s = jnp.einsum(
+            "bgrld,bgrnd->bgrln", qg, k_hat,
+            preferred_element_type=jnp.float32,
+        )
+        s = _c(s, "data", None, None, None, "model")
+        if qe_blk is not None:
+            # Exact (ungrouped) feature slice, e.g. MLA RoPE dims.
+            qe = qe_blk.reshape(b, n_kv, r, cfg.block_q, -1)
+            s = s + jnp.einsum(
+                "bgrld,bgnd->bgrln", qe, kef,
+                preferred_element_type=jnp.float32,
+            )
+        s = s * scale
+        if causal:
+            qi = iq * cfg.block_q + jnp.arange(cfg.block_q)[:, None]
+            kj = jnp.arange(nk)[None, :]
+            s = jnp.where(kj <= qi, s, NEG_INF)
+        if kv_mask is not None:
+            s = jnp.where(kv_mask[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bgrln,bgnd->bgrld", p.astype(q.dtype), vf,
+            preferred_element_type=jnp.float32,
+        )
+        # Cast inside the scan body: the stacked ys (and their grads) stay in
+        # the compute dtype instead of f32 (2× scan-carry memory otherwise).
+        return o.reshape(b, hq, cfg.block_q, dv).astype(q.dtype)
+
+    if q_exact is None:
+
+        def scan_body(_, inputs):
+            iq, q_hat_blk, perm_blk = inputs
+            return None, one_q_block(iq, q_hat_blk, perm_blk, None)
+
+        xs = (jnp.arange(nq), jnp.moveaxis(q_hat, 2, 0), jnp.moveaxis(perms, 2, 0))
+    else:
+
+        def scan_body(_, inputs):
+            iq, q_hat_blk, perm_blk, qe_blk = inputs
+            return None, one_q_block(iq, q_hat_blk, perm_blk, qe_blk)
+
+        xs = (
+            jnp.arange(nq),
+            jnp.moveaxis(q_hat, 2, 0),
+            jnp.moveaxis(perms, 2, 0),
+            jnp.moveaxis(qe_blocks, 2, 0),
+        )
+
+    # Remat per Q block: without this the scan VJP saves every block's
+    # (l × N) score matrix — tens of GiB per layer at 4k×4k — instead of
+    # recomputing them during the backward sweep (FA-2's whole point).
+    scan_body = jax.checkpoint(scan_body, prevent_cse=False)
+    _, blocks = jax.lax.scan(scan_body, None, xs)
+    # blocks: (nq, b, hq, block_q, dv)
+    out = jnp.moveaxis(blocks, 0, 2).reshape(b, hq, n_padded, dv)
+    if pad_q:
+        out = out[:, :, :n, :]
+    return out.astype(q.dtype)
+
+
+def distr_scores(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg: DistrConfig = DistrConfig(),
+    *,
+    scale: float = 1.0,
+    proj: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """The approximate score matrix Ŝ alone (used by the paper's error study,
+    Tables 3-4).  q, k: (B, H, N, d) → (B, H, N, N)."""
+    b, h, n, d = q.shape
+    q, pad_q = _pad_to_multiple(q, cfg.block_q, axis=2)
+    nq = q.shape[2] // cfg.block_q
+    if proj is None:
+        proj = lsh.make_projection(jax.random.PRNGKey(cfg.proj_seed), cfg.block_q)
+    perms = compute_block_permutations(q, cfg, proj)
+    q_blocks = q.reshape(b, h, nq, cfg.block_q, d)
+    if cfg.estimator == "sample":
+        q_hat = grouping.sample_columns(q_blocks, perms, cfg.group_size)
+    else:
+        q_hat = grouping.mean_columns(q_blocks, perms, cfg.group_size)
+    # K broadcast over the nq axis; one fused K̂ per Q-block permutation.
+    k_hat = grouping.fuse_columns(k[:, :, None].astype(jnp.float32), perms, cfg.group_size)
+    # q_hat: (b,h,nq,l,dg); k_hat: (b,h,nq,N,dg)
+    s = jnp.einsum("bhqld,bhqnd->bhqln", q_hat.astype(jnp.float32), k_hat) * scale
+    s = s.reshape(b, h, q.shape[2], k.shape[2])
+    if pad_q:
+        s = s[:, :, :n]
+    return s

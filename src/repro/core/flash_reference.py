@@ -1,0 +1,139 @@
+"""Exact attention references.
+
+``reference_attention``          — naive softmax(QKᵀ)V oracle (fp32 softmax).
+``blockwise_flash_reference``    — FlashAttention-2 double loop (online
+softmax) in pure JAX; numerically equals the oracle and mirrors the block
+structure DistrAttention plugs into (paper §2.2.2 / Fig. 3).
+
+Both are GQA-aware: ``q`` is ``(B, Hq, N, d)``; ``k``/``v`` are
+``(B, Hkv, N, d)`` with ``Hq % Hkv == 0``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group_queries(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B, Hq, N, d) → (B, Hkv, r, N, d) with r = Hq // Hkv."""
+    b, hq, n, d = q.shape
+    if hq % n_kv:
+        raise ValueError(f"Hq={hq} not divisible by Hkv={n_kv}")
+    return q.reshape(b, n_kv, hq // n_kv, n, d)
+
+
+def causal_mask(n_q: int, n_k: int, q_offset: int = 0) -> jnp.ndarray:
+    """Boolean mask (n_q, n_k): True where key j may attend to query i."""
+    qi = q_offset + jnp.arange(n_q)[:, None]
+    kj = jnp.arange(n_k)[None, :]
+    return kj <= qi
+
+
+def reference_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    kv_mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Naive exact attention oracle.
+
+    kv_mask: optional ``(B, Nk)`` bool — False keys are masked out (padding /
+    unfilled KV-cache slots).
+    """
+    b, hq, n, d = q.shape
+    n_kv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+
+    # bf16 operands + f32 accumulation (preferred_element_type): no
+    # materialised f32 copies of Q/K/V — §Perf iteration 1.
+    qg = _group_queries(q, n_kv)
+    s = jnp.einsum(
+        "bgrnd,bgmd->bgrnm", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        s = jnp.where(causal_mask(n, k.shape[2]), s, NEG_INF)
+    if kv_mask is not None:
+        s = jnp.where(kv_mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bgrnm,bgmd->bgrnd", p.astype(q.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(b, hq, n, v.shape[-1]).astype(q.dtype)
+
+
+def blockwise_flash_reference(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """FA-2 style blockwise exact attention (online softmax), pure JAX.
+
+    Sequence lengths must be divisible by the block sizes (the model layer
+    pads); kept strict here so the block bookkeeping stays legible.
+    """
+    b, hq, n, d = q.shape
+    dv = v.shape[-1]
+    n_kv, nk = k.shape[1], k.shape[2]
+    if n % block_q or nk % block_k:
+        raise ValueError("sequence length must divide block sizes")
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    r = hq // n_kv
+
+    nq_blocks = n // block_q
+    nk_blocks = nk // block_k
+
+    qg = _group_queries(q, n_kv)  # (b, g, r, n, d) — compute dtype
+    kf = k
+    vf = v
+
+    def outer(_, iq):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, iq * block_q, block_q, axis=3)
+
+        def inner(carry, ik):
+            acc, m_i, l_i = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(kf, ik * block_k, block_k, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(vf, ik * block_k, block_k, axis=2)
+            s = jnp.einsum(
+                "bgrnd,bgmd->bgrnm", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if causal:
+                qi = iq * block_q + jnp.arange(block_q)[:, None]
+                kj = ik * block_k + jnp.arange(block_k)[None, :]
+                s = jnp.where(kj <= qi, s, NEG_INF)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            alpha = jnp.exp(m_i - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_i * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgrnm,bgmd->bgrnd", p.astype(q.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, n_kv, r, block_q, dv), jnp.float32)
+        m0 = jnp.full((b, n_kv, r, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, r, block_q), jnp.float32)
+        (acc, _, l_i), _ = jax.lax.scan(
+            inner, (acc0, m0, l0), jnp.arange(nk_blocks)
+        )
+        return None, (acc / l_i[..., None]).astype(q.dtype)
+
+    # Remat per Q block — see core.distr_attention (avoids storing every
+    # block's score tile for the backward pass).
+    outer = jax.checkpoint(outer, prevent_cse=False)
+    _, blocks = jax.lax.scan(outer, None, jnp.arange(nq_blocks))
+    # blocks: (nq, b, g, r, block_q, dv) → (b, hq, n, dv)
+    o = jnp.moveaxis(blocks, 0, 3).reshape(b, n_kv, r, n, dv)
+    return o.reshape(b, hq, n, dv).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Sampling and fusion over grouped embedding-dim columns (paper §3.1-3.2).
+
+Given a permutation that orders similar columns next to each other, groups are
+the consecutive runs of ``group_size`` permuted columns:
+
+* ``sample``  — pick one representative Q column per group (paper's sampling);
+* ``fuse``    — sum the K columns of each group (paper's fusion);
+* ``mean``    — beyond-paper estimator: average the Q columns instead of
+  sampling one; pairs with fused K as (1/G*)(Σq)(Σk) and empirically halves
+  the Ŝ error at the cost of a cheap segment-sum on Q.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _take_columns(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather embedding-dim columns: x ``(..., n, d)``, idx ``(..., k)``."""
+    # Broadcast idx over the row axis.
+    return jnp.take_along_axis(x, idx[..., None, :], axis=-1)
+
+
+def sampled_indices(perm: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Representative column index per group: first column in sorted order."""
+    return perm[..., ::group_size]
+
+
+def sample_columns(x: jnp.ndarray, perm: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Q-side sampling: ``(..., n, d) → (..., n, d // group_size)``."""
+    return _take_columns(x, sampled_indices(perm, group_size))
+
+
+def fuse_columns(x: jnp.ndarray, perm: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """K-side fusion: permute columns then sum each run of ``group_size``.
+
+    ``(..., n, d) → (..., n, d // group_size)``
+    """
+    d = x.shape[-1]
+    if d % group_size:
+        raise ValueError(f"d={d} not divisible by group_size={group_size}")
+    permuted = _take_columns(x, perm)
+    new_shape = permuted.shape[:-1] + (d // group_size, group_size)
+    return permuted.reshape(new_shape).sum(axis=-1)
+
+
+def mean_columns(x: jnp.ndarray, perm: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Beyond-paper Q estimator: group mean instead of a single sample."""
+    return fuse_columns(x, perm, group_size) / group_size
+
+
+def reduce_qk(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    perm: jnp.ndarray,
+    group_size: int,
+    estimator: str = "sample",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the paper's reduction to a (Q block, K block) pair.
+
+    Args:
+      q: ``(..., l, d)`` query block.
+      k: ``(..., m, d)`` key block (NOT transposed).
+      perm: ``(..., d)`` grouping permutation derived from the Q block.
+      group_size: the paper's sampling rate ``G*``.
+      estimator: ``"sample"`` (paper) or ``"mean"`` (beyond-paper).
+
+    Returns:
+      ``(q_hat, k_hat)`` with trailing dim ``d // group_size``.  The score
+      block ``q_hat @ k_hat^T`` approximates ``q @ k^T`` (still scaled by
+      1/sqrt(d) downstream — the fused sum stands in for the full d-term dot
+      product).
+    """
+    if estimator == "sample":
+        q_hat = sample_columns(q, perm, group_size)
+    elif estimator == "mean":
+        q_hat = mean_columns(q, perm, group_size)
+    else:
+        raise ValueError(f"unknown estimator {estimator!r}")
+    k_hat = fuse_columns(k, perm, group_size)
+    return q_hat, k_hat

@@ -1,0 +1,4 @@
+"""Distributed runtime: sharding rules, explicit collectives, pipeline PP."""
+from repro.distributed import collectives, pipeline, sharding
+
+__all__ = ["collectives", "pipeline", "sharding"]

@@ -1,0 +1,107 @@
+"""Explicit collective schedules: compute/communication overlap.
+
+XLA's scheduler already overlaps independent collectives with compute; the
+routines here make the overlap *structural* for the cases that matter at
+1000-node scale:
+
+* ``ring_allgather_matmul`` — tensor-parallel matmul where the right operand
+  is gathered ring-hop by ring-hop (collective_permute) while each shard's
+  partial product is computed, instead of a bulk all-gather followed by one
+  big matmul.  Each of the P-1 permute hops is overlapped with a chunk
+  matmul — the classic "all-gather matmul" fusion on TPU ICI rings.
+* ``psum_scatter_matmul`` — the reverse (reduce-scatter) direction for
+  row-parallel layers.
+
+Both are shard_map-level building blocks, validated against the unfused
+reference in tests (they are numerically identical).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def ring_allgather_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
+    """Compute ``x @ W`` where W's *input* dim is sharded over ``axis``.
+
+    x: (..., K) replicated over ``axis``;  w: (K, N) with K sharded — each
+    shard holds (K/P, N).  Ring schedule: at step s each shard multiplies the
+    x-chunk it currently holds with its local W block while permuting the
+    next chunk around the ring.
+    """
+    p = mesh.shape[axis]
+
+    def local(x_l, w_l):
+        # x_l: (..., K) full (replicated); w_l: (K/P, N) local block.
+        idx = jax.lax.axis_index(axis)
+        k_loc = w_l.shape[0]
+
+        def chunk(i):
+            # chunk of x this shard needs at ring step i
+            start = ((idx + i) % p) * k_loc
+            return jax.lax.dynamic_slice_in_dim(x_l, start, k_loc, axis=-1)
+
+        # Step 0 computes with the local chunk; remaining chunks arrive
+        # "via the ring" (here: sliced locally since x is replicated, but the
+        # schedule is the TPU ring schedule — on hardware w would be the
+        # resident tensor and x-chunks the permuted ones).
+        acc = chunk(0) @ w_l
+        for i in range(1, p):
+            acc = acc + chunk(i) @ jax.lax.ppermute(
+                w_l, axis, [(j, (j - i) % p) for j in range(p)]
+            )
+        return acc
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(axis, None)),
+        out_specs=P(),
+        # every shard reconstructs the full product via the ring — value-
+        # replicated by construction, which VMA can't infer statically.
+        check_vma=False,
+    )(x, w)
+
+
+def psum_scatter_matmul(x: jnp.ndarray, w: jnp.ndarray, mesh, axis: str = "model"):
+    """Row-parallel ``x @ W`` with a reduce-scatter epilogue.
+
+    x: (..., K) sharded over axis on K (passed replicated here; each shard
+    slices its K block); w: (K, N) K-sharded.  Output: (..., N) sharded on N,
+    reduce-scattered instead of all-reduced — half the bytes on the wire.
+    """
+    p = mesh.shape[axis]
+
+    def local(x_l, w_l):
+        idx = jax.lax.axis_index(axis)
+        k_loc = w_l.shape[0]
+        x_chunk = jax.lax.dynamic_slice_in_dim(x_l, idx * k_loc, k_loc, axis=-1)
+        partial = x_chunk @ w_l  # (..., N) partial sum
+        return jax.lax.psum_scatter(partial, axis, scatter_dimension=partial.ndim - 1,
+                                    tiled=True)
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(axis, None)),
+        out_specs=P(*([None] * (x.ndim - 1)), axis),
+    )(x, w)
+
+
+def allreduce_with_compression(grads, mesh, *, compress_fn=None, decompress_fn=None):
+    """DP gradient all-reduce hook point (see train.compression for int8
+    error-feedback); identity compression = plain psum-mean."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def local(g):
+        if compress_fn is not None:
+            g = compress_fn(g)
+        for a in axes:
+            g = jax.lax.pmean(g, a)
+        if decompress_fn is not None:
+            g = decompress_fn(g)
+        return g
+
+    spec = P()
+    return jax.shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec)(grads)

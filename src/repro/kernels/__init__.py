@@ -1,0 +1,8 @@
+"""Pallas TPU kernels: flash attention (exact), DistrAttention, SSD.
+
+Each kernel ships with a jit wrapper in ``ops.py`` and a pure-jnp oracle in
+``ref.py``; tests sweep shapes/dtypes and assert allclose in interpret mode.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

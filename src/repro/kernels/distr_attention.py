@@ -1,0 +1,162 @@
+"""DistrAttention Pallas TPU kernel (paper §3.3 fused into FA-2).
+
+Differences from the exact flash kernel:
+
+* Q arrives pre-sampled (``q_hat``, trailing dim ``d/G*``, pre-scaled): the
+  per-Q-block LSH permutation is computed outside the kernel (the paper also
+  runs grouping as a separate lightweight stage, §4.8) and Q-sampling is a
+  cheap one-off gather there.
+* Each KV block is **fused in-kernel** under the current Q-block's
+  permutation: gather K's d columns by ``perm`` then segment-sum runs of
+  ``G*``.  This must live in the kernel: K̂ depends on (Q block, K block)
+  jointly, and materialising it outside would cost O(N²·d/G*) memory.
+* The score matmul contracts over ``d/G*`` instead of ``d`` — the paper's
+  compute reduction.  V and the PV matmul are untouched (full context).
+
+TPU note (DESIGN.md §2): the column gather runs on the VPU (lane shuffles /
+one-hot matmul under Mosaic), freeing MXU cycles; on GPUs the paper uses warp
+shuffles.  Validated against ``ref.distr_attention_ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import NEG_INF, STATS_LANES
+
+
+def _distr_kernel(
+    q_hat_ref,
+    k_ref,
+    v_ref,
+    perm_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    causal: bool,
+    group_size: int,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    should_run = True
+    if causal:
+        should_run = iq * block_q + block_q - 1 >= ik * block_k
+
+    @pl.when(should_run)
+    def _body():
+        q_hat = q_hat_ref[...].astype(jnp.float32)  # (block_q, dg) pre-scaled
+        k = k_ref[...].astype(jnp.float32)  # (block_k, d)
+        v = v_ref[...].astype(jnp.float32)  # (block_k, d)
+        perm = perm_ref[0]  # (d,) int32 — this Q block's permutation
+
+        # --- the paper's fusion: permute K columns, sum each run of G*.
+        k_perm = jnp.take(k, perm, axis=1)  # lane gather (VPU)
+        d = k.shape[1]
+        k_hat = k_perm.reshape(block_k, d // group_size, group_size).sum(axis=2)
+
+        s = jax.lax.dot_general(
+            q_hat, k_hat, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (block_q, block_k) — contraction over d/G* only.
+
+        col = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = col < kv_len
+        if causal:
+            row = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask = jnp.logical_and(mask, col <= row)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...][:, :1]
+        l_prev = l_scr[...][:, :1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l_final = l_scr[...][:, :1]
+        denom = jnp.where(l_final == 0.0, 1.0, l_final)
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def distr_attention_kernel_call(
+    q_hat: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    perm: jnp.ndarray,
+    *,
+    q_per_kv: int,
+    causal: bool,
+    group_size: int,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call.
+
+    q_hat: (BHq, N, d/G*) pre-sampled & pre-scaled queries (padded N).
+    k, v:  (BHkv, Nk, d) (padded Nk).
+    perm:  (BHq, N/block_q, d) int32 per-Q-block permutations.
+    """
+    bhq, n, dg = q_hat.shape
+    bhkv, nk_len, d = k.shape
+    assert bhq == bhkv * q_per_kv, (bhq, bhkv, q_per_kv)
+    assert dg * group_size == d, (dg, group_size, d)
+
+    grid = (bhq, n // block_q, nk_len // block_k)
+
+    kernel = functools.partial(
+        _distr_kernel,
+        causal=causal,
+        group_size=group_size,
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dg), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, i, j: (bh // q_per_kv, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda bh, i, j: (bh // q_per_kv, j, 0)),
+            pl.BlockSpec((None, 1, d), lambda bh, i, j: (bh, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, n, d), q_hat.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
+            pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="distr_attention_fwd",
+    )(q_hat, k, v, perm)

@@ -1,0 +1,225 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles everything the raw kernels keep out of their grids: GQA flattening,
+sequence padding, LSH permutation precompute, scale folding, and the
+analytic cost models used by benchmarks and the §Perf roofline corrections.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grouping, lsh
+from repro.core.distr_attention import DistrConfig, compute_block_permutations
+from repro.kernels.distr_attention import distr_attention_kernel_call
+from repro.kernels.flash_attention import flash_attention_kernel_call
+from repro.kernels.ssd import ssd_kernel_call
+
+
+def _pad_seq(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    n = x.shape[2]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return x, n
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Exact FA-2 Pallas kernel.  q: (B,Hq,N,d); k,v: (B,Hkv,Nk,d)."""
+    b, hq, n, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    q_per_kv = hq // hkv
+
+    q, n_orig = _pad_seq(q, block_q)
+    k, kv_len = _pad_seq(k, block_k)
+    v, _ = _pad_seq(v, block_k)
+
+    out = flash_attention_kernel_call(
+        q.reshape(b * hq, q.shape[2], d),
+        k.reshape(b * hkv, k.shape[2], d),
+        v.reshape(b * hkv, v.shape[2], d),
+        q_per_kv=q_per_kv,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=kv_len,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, -1, d)[:, :, :n_orig, :]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "causal", "scale", "interpret"))
+def distr_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: DistrConfig = DistrConfig(),
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """DistrAttention Pallas kernel (paper §3.3 + FA-2 integration).
+
+    Stage 1 (outside kernel, XLA): LSH permutations per Q block + Q sampling.
+    Stage 2 (kernel): per-KV-block fusion + reduced-d flash attention.
+    """
+    b, hq, n, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    q_per_kv = hq // hkv
+    g = cfg.group_size
+
+    q, n_orig = _pad_seq(q, cfg.block_q)
+    k, kv_len = _pad_seq(k, cfg.block_k)
+    v, _ = _pad_seq(v, cfg.block_k)
+    n_pad = q.shape[2]
+    nq_blocks = n_pad // cfg.block_q
+
+    proj = lsh.make_projection(jax.random.PRNGKey(cfg.proj_seed), cfg.block_q)
+    if cfg.shared_kv_perm:
+        q_mean = q.reshape(b, hkv, q_per_kv, n_pad, d).mean(axis=2)
+        perms = compute_block_permutations(q_mean, cfg, proj)  # (b, hkv, nq, d)
+        perms = jnp.broadcast_to(
+            perms[:, :, None], (b, hkv, q_per_kv, nq_blocks, d)
+        ).reshape(b, hq, nq_blocks, d)
+    else:
+        perms = compute_block_permutations(q, cfg, proj)  # (b, hq, nq, d)
+
+    q_blocks = q.reshape(b, hq, nq_blocks, cfg.block_q, d)
+    if cfg.estimator == "sample":
+        q_hat = grouping.sample_columns(q_blocks, perms, g)
+    elif cfg.estimator == "mean":
+        q_hat = grouping.mean_columns(q_blocks, perms, g)
+    else:
+        raise ValueError(f"unknown estimator {cfg.estimator!r}")
+    q_hat = (q_hat * scale).reshape(b * hq, n_pad, d // g).astype(q.dtype)
+
+    out = distr_attention_kernel_call(
+        q_hat,
+        k.reshape(b * hkv, k.shape[2], d),
+        v.reshape(b * hkv, v.shape[2], d),
+        perms.reshape(b * hq, nq_blocks, d),
+        q_per_kv=q_per_kv,
+        causal=causal,
+        group_size=g,
+        block_q=cfg.block_q,
+        block_k=cfg.block_k,
+        kv_len=kv_len,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, -1, d)[:, :, :n_orig, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Mamba-2 SSD.  x: (B,N,H,P); a: (B,N,H); b,c: (B,N,G,S)."""
+    bsz, n, h, p = x.shape
+    g, s = b.shape[2], b.shape[3]
+    heads_per_group = h // g
+    pad = (-n) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_pad = x.shape[1]
+
+    xr = x.transpose(0, 2, 1, 3).reshape(bsz * h, n_pad, p)
+    ar = a.transpose(0, 2, 1).reshape(bsz * h, n_pad, 1)
+    br = b.transpose(0, 2, 1, 3).reshape(bsz * g, n_pad, s)
+    cr = c.transpose(0, 2, 1, 3).reshape(bsz * g, n_pad, s)
+
+    y = ssd_kernel_call(
+        xr, ar, br, cr, heads_per_group=heads_per_group, chunk=chunk,
+        interpret=interpret,
+    )
+    y = y.reshape(bsz, h, n_pad, p).transpose(0, 2, 1, 3)
+    return y[:, :n, :, :]
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost models (benchmarks + roofline corrections).
+# ---------------------------------------------------------------------------
+
+
+def attention_cost(
+    b: int,
+    hq: int,
+    n: int,
+    nk: int,
+    d: int,
+    *,
+    causal: bool = False,
+    group_size: int = 1,
+    block_q: int = 128,
+) -> dict:
+    """FLOPs / bytes model of (Distr)FlashAttention for one forward pass.
+
+    MXU matmul FLOPs, VPU fusion adds, and HBM bytes (bf16 in/out, the
+    flash structure never materialises S/P).  ``group_size=1`` = exact FA-2.
+    """
+    frac = 0.5 * (1 + 1 / max(nk // max(block_q, 1), 1)) if causal else 1.0
+    d_eff = d // group_size
+    qk_flops = 2 * b * hq * n * nk * d_eff * frac
+    pv_flops = 2 * b * hq * n * nk * d * frac
+    softmax_flops = 4 * b * hq * n * nk * frac  # exp, max, sum, scale
+    # K fusion: for each (q-block, kv element) a d-length permuted add chain.
+    fusion_adds = (
+        b * hq * (n // max(block_q, 1)) * nk * d * frac if group_size > 1 else 0
+    )
+    lsh_flops = (
+        2 * b * hq * (n // max(block_q, 1)) * lsh.N_PRIME * block_q * d
+        if group_size > 1
+        else 0
+    )
+    w = 2  # bf16
+    io_bytes = w * (
+        b * hq * n * (d + d // group_size if group_size > 1 else d)  # Q (+Q̂)
+        + b * hq * (n // max(block_q, 1)) * nk * 0  # K̂ stays in VMEM
+        + 2 * b * hq * nk * d  # K, V read (per-head upper bound)
+        + b * hq * n * d  # O write
+    )
+    return {
+        "qk_flops": qk_flops,
+        "pv_flops": pv_flops,
+        "softmax_flops": softmax_flops,
+        "fusion_adds": fusion_adds,
+        "lsh_flops": lsh_flops,
+        "mxu_flops": qk_flops + pv_flops,
+        "total_flops": qk_flops + pv_flops + softmax_flops + fusion_adds + lsh_flops,
+        "hbm_bytes": io_bytes,
+    }
+
+
+def ssd_cost(b: int, n: int, h: int, p: int, s: int, *, chunk: int = 64) -> dict:
+    """FLOPs model of chunked SSD forward."""
+    nc = n // chunk
+    intra = 2 * b * h * nc * (chunk * chunk * s + chunk * chunk * p)
+    inter = 2 * b * h * nc * (chunk * s * p * 2)
+    return {"total_flops": intra + inter, "mxu_flops": intra + inter}

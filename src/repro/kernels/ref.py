@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+They intentionally reuse ``repro.core`` (itself validated against the naive
+softmax oracle) so kernel semantics and framework semantics cannot drift.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.distr_attention import DistrConfig, distr_attention
+from repro.core.flash_reference import reference_attention
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Oracle for kernels/flash_attention.py (exact attention)."""
+    return reference_attention(q, k, v, causal=causal, scale=scale)
+
+
+def distr_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: DistrConfig,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Oracle for kernels/distr_attention.py.
+
+    The pure-JAX blockwise DistrAttention computes a full-row softmax per Q
+    block; the kernel computes the same quantity with an online softmax — the
+    results agree to float tolerance when both use the same permutations
+    (guaranteed by the shared ``core.lsh`` stage and proj_seed).
+    """
+    return distr_attention(q, k, v, cfg, causal=causal, scale=scale)
+
+
+def ssd_ref(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    chunk: int = 64,
+) -> jnp.ndarray:
+    """Oracle for kernels/ssd.py (Mamba-2 state-space duality, naive scan).
+
+    x: (B, N, H, P) inputs;  a: (B, N, H) log-decay (a = -softplus(...));
+    b, c: (B, N, G, S) input/output projections (G state groups).
+    Returns y: (B, N, H, P).  Sequential over N — slow but unambiguous.
+    """
+    bsz, n, h, p = x.shape
+    g, s = b.shape[2], b.shape[3]
+    heads_per_group = h // g
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    state = jnp.zeros((bsz, h, s, p), jnp.float32)  # (B, H, S, P)
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    outs = []
+    for t in range(n):
+        decay = jnp.exp(af[:, t])[:, :, None, None]  # (B, H, 1, 1)
+        bt = jnp.repeat(bf[:, t], heads_per_group, axis=1)  # (B, H, S)
+        ct = jnp.repeat(cf[:, t], heads_per_group, axis=1)
+        state = state * decay + bt[..., None] * xf[:, t][:, :, None, :]
+        outs.append(jnp.einsum("bhs,bhsp->bhp", ct, state))
+    y = jnp.stack(outs, axis=1)  # (B, N, H, P)
+    return y.astype(x.dtype)

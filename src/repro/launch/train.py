@@ -1,0 +1,77 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --reduced \
+      --steps 200 --batch 8 --seq 128 --workdir /tmp/run1
+
+On a real cluster this process is started once per host (jax.distributed
+initialises from the TPU/GKE environment); on this container it drives the
+same Trainer on CPU with the reduced configs.  Elastic restart: rerunning
+with the same --workdir resumes from the latest checkpoint on whatever
+device count is available (mesh-agnostic checkpoints).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.train.data import BinaryShardData, SyntheticLMData
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--impl", default=None, help="attention impl override")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--data", default=None,
+                    help="glob of .bin token shards (default: synthetic)")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.impl:
+        cfg = cfg.replace(attention=cfg.attention.with_impl(args.impl))
+
+    opt_cfg = OptimizerConfig(
+        peak_lr=args.lr,
+        warmup_steps=max(args.steps // 20, 1),
+        total_steps=args.steps,
+        schedule=cfg.schedule,
+        grad_accum=args.grad_accum,
+    )
+    if args.data:
+        import glob
+
+        data = BinaryShardData(sorted(glob.glob(args.data)), args.batch, args.seq)
+    else:
+        data = SyntheticLMData(cfg.vocab, args.batch, args.seq, seed=args.seed)
+
+    mesh = None
+    if len(jax.devices()) > 1:
+        mesh = make_host_mesh(args.model_parallel)
+        print(f"[train] mesh: {dict(mesh.shape)}")
+
+    os.makedirs(args.workdir, exist_ok=True)
+    trainer = Trainer(cfg, opt_cfg, data, workdir=args.workdir, mesh=mesh,
+                      seed=args.seed)
+    hist = trainer.run(args.steps)
+    if hist:
+        print(f"[train] done: loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f} "
+              f"over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: primitive layers, attention (GQA/MLA), MoE, Mamba-2, blocks,
+and full-LM assembly for all assigned architectures."""
+from repro.models import attention, layers, lm, mamba, moe, transformer
+
+__all__ = ["attention", "layers", "lm", "mamba", "moe", "transformer"]

@@ -1,0 +1,252 @@
+"""Mamba-2 (SSD) block — the attention-free assigned archs (mamba2-130m) and
+the hybrid backbone (zamba2-7b).
+
+``ssd_xla`` is the chunked state-space-duality forward in pure JAX (scan over
+chunks) used by dry-runs so cost_analysis sees real FLOPs; the Pallas kernel
+(repro.kernels.ssd) implements the same math for TPU and validates against
+the same oracle.  ``ssd_step`` is the O(1)-per-token decode recurrence.
+
+DistrAttention is inapplicable here (no QKᵀ softmax stage) — DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import constrain
+
+
+# ---------------------------------------------------------------------------
+# SSD forward (chunked, XLA) and decode step
+# ---------------------------------------------------------------------------
+
+
+def ssd_xla(
+    x: jnp.ndarray,  # (B, N, H, P)
+    a: jnp.ndarray,  # (B, N, H) log-decays (<= 0)
+    b: jnp.ndarray,  # (B, N, G, S)
+    c: jnp.ndarray,  # (B, N, G, S)
+    *,
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    bsz, n, h, p = x.shape
+    g, s = b.shape[2], b.shape[3]
+    r = h // g
+    pad = (-n) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    # chunk-major xs for the scan: (nc, B, chunk, ...)
+    def chunked(t, feat_dims):
+        return jnp.moveaxis(
+            t.reshape((bsz, nc, chunk) + feat_dims), 1, 0
+        )
+
+    xs = chunked(x.astype(jnp.float32), (g, r, p))
+    as_ = chunked(a.astype(jnp.float32), (h,))
+    bs = chunked(b.astype(jnp.float32), (g, s))
+    cs = chunked(c.astype(jnp.float32), (g, s))
+
+    row = jnp.arange(chunk)[:, None]
+    col = jnp.arange(chunk)[None, :]
+    tril = col <= row
+
+    def body(state, inputs):
+        # state: (B, G, r, S, P)
+        x_c, a_c, b_c, c_c = inputs
+        a_cum = jnp.cumsum(a_c, axis=1)  # (B, Q, H) inclusive
+        a_grp = a_cum.reshape(bsz, chunk, g, r)
+
+        # Intra-chunk
+        cb = jnp.einsum("bigs,bjgs->bgij", c_c, b_c)  # (B, G, Q, Q)
+        decay = jnp.exp(
+            a_grp[:, :, None, :, :] - a_grp[:, None, :, :, :]
+        )  # (B, Q, Q, G, r)
+        decay = jnp.where(tril[None, :, :, None, None], decay, 0.0)
+        y = jnp.einsum("bgij,bijgr,bjgrp->bigrp", cb, decay, x_c)
+
+        # Inter-chunk: carry-in state decayed to each step.
+        y = y + jnp.exp(a_grp)[..., None] * jnp.einsum(
+            "bigs,bgrsp->bigrp", c_c, state
+        )
+
+        # State update.
+        a_tot = a_grp[:, -1]  # (B, G, r)
+        w = jnp.exp(a_tot[:, None] - a_grp)  # (B, Q, G, r)
+        new_state = (
+            jnp.exp(a_tot)[..., None, None] * state
+            + jnp.einsum("bjgs,bjgr,bjgrp->bgrsp", b_c, w, x_c)
+        )
+        # ys in compute dtype (f32 ys double the stacked-scan memory).
+        return new_state, y.astype(x.dtype)
+
+    state0 = jnp.zeros((bsz, g, r, s, p), jnp.float32)
+    final_state, ys = jax.lax.scan(body, state0, (xs, as_, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, h, p)
+    y = y[:, :n].astype(x.dtype)
+    if return_state:
+        # (B, G, r, S, P) → (B, H, S, P), matching ssd_step's layout.
+        return y, final_state.reshape(bsz, h, s, p)
+    return y
+
+
+def ssd_step(
+    x_t: jnp.ndarray,  # (B, H, P)
+    a_t: jnp.ndarray,  # (B, H)
+    b_t: jnp.ndarray,  # (B, G, S)
+    c_t: jnp.ndarray,  # (B, G, S)
+    state: jnp.ndarray,  # (B, H, S, P)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step of the SSD recurrence → (y_t (B,H,P), new_state)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    r = h // g
+    bt = jnp.repeat(b_t, r, axis=1)  # (B, H, S)
+    ct = jnp.repeat(c_t, r, axis=1)
+    decay = jnp.exp(a_t.astype(jnp.float32))[..., None, None]
+    state = state * decay + bt[..., None].astype(jnp.float32) * x_t[
+        :, :, None, :
+    ].astype(jnp.float32)
+    y = jnp.einsum("bhs,bhsp->bhp", ct.astype(jnp.float32), state)
+    return y.astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def _conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d_in = cfg.d_inner
+    h = cfg.ssm_heads
+    gs = cfg.ssm_groups * cfg.ssm_state
+    proj_out = 2 * d_in + 2 * gs + h  # z, x, B, C, dt
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.linear_init(k1, cfg.d_model, proj_out, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, _conv_dim(cfg)))
+                   * (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((h,), 0.5, jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": layers.rmsnorm_init(d_in, dtype),
+        "out_proj": layers.linear_init(k3, d_in, cfg.d_model, dtype=dtype),
+    }
+
+
+def mamba_axes(cfg):
+    return {
+        "in_proj": layers.linear_axes(None, "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "out_norm": layers.rmsnorm_axes(),
+        "out_proj": layers.linear_axes("mlp", None),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, cfg):
+    d_in = cfg.d_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + d_in + 2 * gs]
+    dt = proj[..., d_in + d_in + 2 * gs :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, conv_w: jnp.ndarray, conv_b: jnp.ndarray):
+    """Depthwise causal conv over the sequence (kernel taps via shifts)."""
+    k = conv_w.shape[0]
+    y = xbc * conv_w[k - 1].astype(xbc.dtype)
+    for i in range(1, k):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        y = y + shifted * conv_w[k - 1 - i].astype(xbc.dtype)
+    return jax.nn.silu(y + conv_b.astype(xbc.dtype))
+
+
+def mamba_apply(params, x: jnp.ndarray, cfg, *, return_state: bool = False):
+    """Full-sequence Mamba-2 block.  x: (B, N, D) → (B, N, D).
+
+    With return_state=True also returns (conv_state, ssm_state) at position N
+    so serving can switch from prefill to step decoding.
+    """
+    bsz, n, _ = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, s = cfg.ssm_groups, cfg.ssm_state
+
+    proj = layers.linear_apply(params["in_proj"], x)
+    z, xbc_raw, dt = _split_proj(proj, cfg)
+    xbc_raw = constrain(xbc_raw, "data", None, "model")
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs = xbc[..., : cfg.d_inner]
+    b = xbc[..., cfg.d_inner : cfg.d_inner + g * s].reshape(bsz, n, g, s)
+    c = xbc[..., cfg.d_inner + g * s :].reshape(bsz, n, g, s)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,N,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    a_t = dt * a  # log-decay per step
+    x_heads = xs.reshape(bsz, n, h, p)
+    x_in = x_heads * dt[..., None].astype(x_heads.dtype)
+
+    ssd_out = ssd_xla(x_in, a_t, b, c, chunk=cfg.ssm_chunk,
+                      return_state=return_state)
+    y, ssm_state = ssd_out if return_state else (ssd_out, None)
+    y = y + x_heads * params["d_skip"][None, None, :, None].astype(x_heads.dtype)
+    y = y.reshape(bsz, n, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm_apply(params["out_norm"], y, cfg.norm_eps)
+    out = layers.linear_apply(params["out_proj"], y)
+    if return_state:
+        k = cfg.ssm_conv
+        conv_state = xbc_raw[:, n - (k - 1):, :]  # last k-1 pre-conv inputs
+        return out, (conv_state.astype(x.dtype), ssm_state)
+    return out
+
+
+def mamba_decode_apply(params, x: jnp.ndarray, cfg, *, conv_state, ssm_state):
+    """One-token step.  x: (B, 1, D); conv_state: (B, k-1, conv_dim);
+    ssm_state: (B, H, S, P).  Returns (y, (conv_state, ssm_state))."""
+    bsz = x.shape[0]
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, s = cfg.ssm_groups, cfg.ssm_state
+    k = cfg.ssm_conv
+
+    proj = layers.linear_apply(params["in_proj"], x)
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc_t = xbc[:, 0]  # (B, conv_dim)
+
+    window = jnp.concatenate([conv_state, xbc_t[:, None]], axis=1)  # (B,k,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv_state = window[:, 1:]
+
+    xs = conv_out[:, : cfg.d_inner]
+    b = conv_out[:, cfg.d_inner : cfg.d_inner + g * s].reshape(bsz, g, s)
+    c = conv_out[:, cfg.d_inner + g * s :].reshape(bsz, g, s)
+
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a_t = dt_t * (-jnp.exp(params["a_log"]))  # (B, H)
+    x_heads = xs.reshape(bsz, h, p)
+    x_in = (x_heads * dt_t[..., None]).astype(x.dtype)
+
+    y, new_ssm_state = ssd_step(x_in, a_t, b.astype(x.dtype), c.astype(x.dtype),
+                                ssm_state)
+    y = y + x_heads.astype(y.dtype) * params["d_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm_apply(params["out_norm"], y, cfg.norm_eps)
+    return layers.linear_apply(params["out_proj"], y), (new_conv_state, new_ssm_state)

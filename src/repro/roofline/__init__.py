@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline import analysis
+
+__all__ = ["analysis"]

@@ -1,0 +1,395 @@
+"""Roofline extraction from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh) cell, all **per-chip** (the SPMD
+partitioned module reports per-device shapes/FLOPs):
+
+  compute    = flops_per_dev / PEAK_FLOPS
+  memory     = hbm_bytes_per_dev / HBM_BW
+  collective = collective_operand_bytes_per_dev / ICI_BW
+
+``collective_bytes`` parses the post-partitioning HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+and sums operand sizes (per-device, per spec).  MODEL_FLOPS = 6·N_active·D
+(2·N_active·D for inference) measures how much compiled compute is "useful".
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+# ---------------------------------------------------------------------------
+# HLO cost walker.
+#
+# XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+# undercounts scanned-layer models by ~n_layers (verified empirically).  The
+# dry-run therefore walks the optimized HLO text itself: per-computation
+# flops / HBM-byte / collective totals, propagated through the call graph
+# with ``known_trip_count`` multipliers on while ops.  All shapes in the
+# SPMD-partitioned module are per-device, so every total is per-chip.
+#
+# Bytes model (documented bias): output bytes of every materialising op plus
+# operand bytes of dot/fusion/collective/scatter/gather — i.e. each tensor is
+# written once and read where consumed by a heavy op.  Fusion internals are
+# excluded (XLA fused them precisely so they don't touch HBM).
+# ---------------------------------------------------------------------------
+
+# `<name> = <type> <op>(...)`; <type> may be a tuple with /*index=N*/
+# comments, so match lazily up to the first `word(` — ops never appear
+# inside type strings.
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+_BYTES_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "broadcast", "reshape", "convert", "copy",
+    "transpose",
+}
+
+
+def _parse_shapes(s: str) -> int:
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(s))
+
+
+class _Comp:
+    __slots__ = ("flops", "bytes", "coll", "calls", "dus_root_bytes", "root_op")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = {op: 0.0 for op in COLLECTIVE_OPS}
+        self.calls: list[tuple[str, object]] = []  # (callee, mult | ("fusion", out_bytes))
+        # If this computation's ROOT is a dynamic-update-slice, fusions
+        # calling it are in-place: traffic = the update slice, not the buffer.
+        self.dus_root_bytes: float | None = None
+        self.root_op: str | None = None
+
+
+def _split_computations(txt: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for raw in txt.splitlines():
+        if raw and not raw[0].isspace() and "{" in raw and ("->" in raw or raw.startswith("ENTRY")):
+            m = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)", raw.strip())
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if raw.strip() == "}":
+            current = None
+            continue
+        if current is not None and raw.strip():
+            comps[current].append(raw.strip())
+    return comps, entry
+
+
+def _analyze_computation(lines: list[str]) -> _Comp:
+    shapes: dict[str, str] = {}
+    c = _Comp()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        shapes[name] = shape_str
+        out_bytes = _parse_shapes(shape_str)
+        if line.startswith("ROOT"):
+            c.root_op = op
+        # operand names: tokens after the op's '(' up to the matching ')'
+        tail = line[m.end():]
+        depth = 1
+        arglist = []
+        buf = ""
+        for ch in tail:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    arglist.append(buf)
+                    break
+            if depth >= 1:
+                buf += ch
+        args = [a.strip().lstrip("%") for a in (arglist[0].split(",") if arglist else [])]
+        args = [a for a in args if a]
+
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in COLLECTIVE_OPS and not op.endswith("-done"):
+            opnd = sum(_parse_shapes(shapes.get(a, "")) for a in args)
+            c.coll[base_op] += opnd if opnd else out_bytes
+            c.bytes += out_bytes
+            continue
+        if op.endswith("-done"):
+            continue
+
+        if op in ("dot", "dot_general", "convolution"):
+            out_elems = out_bytes / max(
+                _DTYPE_BYTES.get(_SHAPE_RE.search(shape_str).group(1), 4), 1
+            ) if _SHAPE_RE.search(shape_str) else 0
+            contract = 1
+            mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            lhs_shape = shapes.get(args[0], "") if args else ""
+            lhs_dims = _SHAPE_RE.search(lhs_shape)
+            if mdims and lhs_dims and lhs_dims.group(2):
+                dims = [int(x) for x in lhs_dims.group(2).split(",")]
+                for di in mdims.group(1).split(","):
+                    if di != "":
+                        contract *= dims[int(di)]
+            c.flops += 2.0 * out_elems * contract
+            c.bytes += out_bytes + sum(
+                _parse_shapes(shapes.get(a, "")) for a in args
+            )
+            continue
+
+        if op == "fusion":
+            mc = re.search(r"calls=%?([\w\.\-]+)", line)
+            if mc:
+                # Write bytes resolved at the call site in hlo_cost (root-
+                # aware: in-place DUS-root fusions count the slice only).
+                c.calls.append((mc.group(1), ("fusion", out_bytes)))
+            else:
+                c.bytes += out_bytes
+            continue
+        if op == "while":
+            trip = 1.0
+            mt = re.search(r'known_trip_count[^0-9]*(\d+)', line)
+            if mt:
+                trip = float(mt.group(1))
+            for attr in ("body", "condition"):
+                mb = re.search(attr + r"=%?([\w\.\-]+)", line)
+                if mb:
+                    c.calls.append((mb.group(1), trip))
+            continue
+        if op in ("call", "async-start"):
+            mb = re.search(r"to_apply=%?([\w\.\-]+)", line)
+            if mb:
+                c.calls.append((mb.group(1), 1.0))
+            continue
+        if op == "conditional":
+            mb = re.search(r"branch_computations=\{([^}]*)\}", line)
+            branches = []
+            if mb:
+                branches = [b.strip().lstrip("%") for b in mb.group(1).split(",")]
+            else:
+                for attr in ("true_computation", "false_computation"):
+                    ma = re.search(attr + r"=%?([\w\.\-]+)", line)
+                    if ma:
+                        branches.append(ma.group(1))
+            # exactly one branch runs; charge the mean
+            for bname in branches:
+                c.calls.append((bname, 1.0 / max(len(branches), 1)))
+            continue
+
+        if op == "dynamic-update-slice":
+            # In-place aliased by XLA: traffic = the update slice, not the
+            # full buffer (which would overcount scan stacking by ×trips).
+            upd = (
+                2 * _parse_shapes(shapes.get(args[1], "")) if len(args) >= 2 else 0
+            )
+            c.bytes += upd
+            if line.startswith("ROOT"):
+                c.dus_root_bytes = float(upd)
+            continue
+        if op == "dynamic-slice":
+            c.bytes += 2 * out_bytes  # read slice + write result
+            continue
+        if op == "scatter":
+            # In-place on TPU (operand aliased to output): traffic = the
+            # touched rows (read-modify-write of updates), not the buffer —
+            # KV-cache inserts would otherwise count the full cache/layer.
+            upd = _parse_shapes(shapes.get(args[-1], "")) if args else 0
+            c.bytes += 3 * (upd or out_bytes // 16)
+            continue
+        if op == "gather":
+            c.bytes += 2 * out_bytes  # read gathered rows + write result
+            continue
+        if op in ("sort", "reduce", "reduce-window", "select-and-scatter",
+                  "custom-call"):
+            c.bytes += out_bytes + sum(
+                _parse_shapes(shapes.get(a, "")) for a in args
+            )
+            continue
+        if op in ("pad", "concatenate", "slice"):
+            c.bytes += out_bytes
+            continue
+        if op not in _BYTES_SKIP_OPS:
+            c.bytes += out_bytes
+    return c
+
+
+def hlo_cost(txt: str) -> dict:
+    """Per-device {flops, bytes, coll{op: bytes}} with trip-count scaling."""
+    comps, entry = _split_computations(txt)
+    analyzed = {name: _analyze_computation(lines) for name, lines in comps.items()}
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    # fusion computations: flops recurse, bytes do NOT (fused = no HBM)
+    def total(name: str, as_fusion: bool) -> tuple[float, float, dict]:
+        key = name + ("#f" if as_fusion else "")
+        if key in memo:
+            return memo[key]
+        comp = analyzed.get(name)
+        if comp is None:
+            return 0.0, 0.0, {}
+        fl = comp.flops
+        by = 0.0 if as_fusion else comp.bytes
+        co = dict(comp.coll)
+        memo[key] = (fl, by, co)  # provisional (cycle guard)
+        for callee, mult in comp.calls:
+            is_fusion_call = isinstance(mult, tuple) and mult[0] == "fusion"
+            m = 1.0 if is_fusion_call else float(mult)
+            cf, cb, cc = total(callee, is_fusion_call)
+            fl += m * cf
+            by += m * cb
+            if is_fusion_call:
+                callee_comp = analyzed.get(callee)
+                if callee_comp is not None and callee_comp.dus_root_bytes is not None:
+                    by += callee_comp.dus_root_bytes
+                elif callee_comp is not None and callee_comp.root_op in (
+                    "convert", "copy", "bitcast"
+                ):
+                    # pure dtype-cast/copy fusion: a CPU float-normalisation
+                    # artifact (bf16 loop carries widened to f32) — free on
+                    # the TPU target, so excluded from the HBM model.
+                    pass
+                else:
+                    by += mult[1]
+            for k, v in cc.items():
+                co[k] = co.get(k, 0.0) + m * v
+        memo[key] = (fl, by, co)
+        return memo[key]
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "coll": {}}
+    fl, by, co = total(entry, False)
+    return {"flops": fl, "bytes": by, "coll": co}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device collective operand bytes by kind (trip-count aware)."""
+    co = hlo_cost(hlo_text)["coll"]
+    return {op: int(co.get(op, 0)) for op in COLLECTIVE_OPS}
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_by_op: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_dev": self.flops_per_dev,
+            "hbm_bytes_per_dev": self.hbm_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_by_op": self.coll_by_op,
+        }
+
+
+def roofline(compiled) -> RooflineTerms:
+    cost = hlo_cost(compiled.as_text())
+    flops = float(cost["flops"])
+    bytes_ = float(cost["bytes"])
+    coll = {k: float(v) for k, v in cost["coll"].items()}
+    coll_total = float(sum(coll.values()))
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=coll_total / ICI_BW,
+        flops_per_dev=flops,
+        hbm_bytes_per_dev=bytes_,
+        coll_bytes_per_dev=coll_total,
+        coll_by_op=coll,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6·N·D convention)
+# ---------------------------------------------------------------------------
+
+
+def active_params(cfg, param_shapes) -> tuple[int, int]:
+    """(total_params, active_params): MoE counts routed experts × k/E.
+
+    Embedding tables are excluded from the 6ND matmul count (lookup ≠ matmul)
+    but the tied/untied LM head IS counted.
+    """
+    import jax
+
+    total = 0
+    active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_shapes)[0]:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if "embed" in keys and "table" in keys:
+            if cfg.tie_embeddings:
+                active += n  # doubles as LM head
+            continue
+        if "pos_embed" in keys:
+            continue
+        if "experts" in keys:
+            active += n * cfg.moe_top_k / max(cfg.n_experts, 1)
+            continue
+        active += n
+    return int(total), int(active)
+
+
+def model_flops(cfg, shape, active: int) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens

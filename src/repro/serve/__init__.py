@@ -1,0 +1,4 @@
+"""Serving substrate: KV caches, prefill/decode steps, sampler, engine."""
+from repro.serve import engine, kv_cache, sampler, serve_step
+
+__all__ = ["engine", "kv_cache", "sampler", "serve_step"]

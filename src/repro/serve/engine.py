@@ -1,0 +1,165 @@
+"""Continuous-batching serving engine.
+
+Slot-based: the decode cache holds ``max_slots`` sequences; requests are
+prefilled one at a time (bucketed prompt padding bounds recompiles) and their
+caches inserted into free slots; every ``step()`` advances *all* active slots
+by one token in a single jitted decode.  Finished sequences free their slot
+immediately — the vLLM-style continuous batching pattern at step granularity.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kv_cache
+from repro.serve.sampler import sample
+from repro.serve.serve_step import make_decode_step, make_prefill
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 4095) // 4096) * 4096
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_slots: int = 8, max_len: int = 512,
+                 temperature: float = 0.0, seed: int = 0):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "engine drives decoder-only archs; use serve_step directly "
+                "for enc-dec"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self._uid = itertools.count()
+        self._rng = jax.random.PRNGKey(seed)
+
+        self.cache = kv_cache.init_cache(cfg, max_slots, max_len)
+        self.pos = jnp.zeros((max_slots,), jnp.int32)
+        self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        self.active: dict[int, Request] = {}  # slot -> request
+        self.pending: list[Request] = []
+        self.finished: list[Request] = []
+
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._prefills: dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    def add_request(self, prompt: list[int], *, max_new_tokens: int = 32,
+                    eos_id: int | None = None) -> int:
+        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
+        self.pending.append(req)
+        return req.uid
+
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.max_slots) if s not in self.active]
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            self._prefills[bucket] = jax.jit(
+                make_prefill(self.cfg, self.max_len)
+            )
+        return self._prefills[bucket]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.pending:
+                break
+            req = self.pending.pop(0)
+            n = len(req.prompt)
+            bucket = min(_bucket(n), self.max_len)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = req.prompt
+            logits, cache1 = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks)
+            )
+            # NOTE: right-padding shifts the "last" logit for padded prompts;
+            # re-read the true last-position logits from position n-1 by
+            # decoding from position n with the prompt's last token instead.
+            self.cache = {
+                key: self._insert_slot(self.cache[key], cache1[key], slot,
+                                       self._slot_axis(key))
+                for key in self.cache
+            }
+            self.pos = self.pos.at[slot].set(n - 1)
+            self.tokens = self.tokens.at[slot, 0].set(req.prompt[-1])
+            self.active[slot] = req
+
+    @staticmethod
+    def _slot_axis(key: str) -> int:
+        """Batch/slot axis per cache layout (serve.kv_cache docstring)."""
+        if key == "cross_len":
+            return 0
+        if key.startswith("groups_"):
+            return 2  # (G, per_group, B, ...)
+        return 1  # (L_or_G, B, ...)
+
+    @staticmethod
+    def _insert_slot(full: jnp.ndarray, one: jnp.ndarray, slot: int,
+                     axis: int) -> jnp.ndarray:
+        # pad seq dims that differ (prefill bucket < max_len)
+        for ax2 in range(full.ndim):
+            if ax2 != axis and one.shape[ax2] != full.shape[ax2]:
+                widths = [(0, 0)] * full.ndim
+                widths[ax2] = (0, full.shape[ax2] - one.shape[ax2])
+                one = jnp.pad(one, widths)
+        idx = [slice(None)] * full.ndim
+        idx[axis] = slice(slot, slot + 1)
+        return full.at[tuple(idx)].set(one.astype(full.dtype))
+
+    def step(self) -> list[Request]:
+        """Admit pending, decode one token for all active slots; returns
+        newly finished requests."""
+        self._admit()
+        if not self.active:
+            return []
+        # advance positions: decode writes at pos+1 (pos = last filled index)
+        step_pos = self.pos + 1
+        self._rng, sub = jax.random.split(self._rng)
+        logits, self.cache = self._decode(
+            self.params, self.tokens, self.cache, step_pos
+        )
+        next_tokens = sample(logits, rng=sub, temperature=self.temperature)
+        self.pos = step_pos
+        self.tokens = next_tokens[:, None]
+
+        done_now = []
+        toks = np.asarray(next_tokens)
+        for slot, req in list(self.active.items()):
+            t = int(toks[slot])
+            req.generated.append(t)
+            limit = len(req.generated) >= req.max_new_tokens
+            hit_eos = req.eos_id is not None and t == req.eos_id
+            full = int(self.pos[slot]) >= self.max_len - 2
+            if limit or hit_eos or full:
+                req.done = True
+                done_now.append(req)
+                self.finished.append(req)
+                del self.active[slot]
+        return done_now
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.active and not self.pending:
+                break
+        return self.finished

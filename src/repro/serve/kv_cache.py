@@ -1,0 +1,196 @@
+"""KV-cache layouts per architecture family + the beyond-paper fused-K̂
+DistrAttention decode cache.
+
+Layouts (L = layers, B = slots, S = max_len):
+  dense/moe (GQA): k, v            (L, B, Hkv, S, dh)
+  mla:             ckv             (L, B, S, kv_lora), krope (L, B, S, rope_d)
+  ssm:             conv            (L, B, k-1, conv_dim), ssm (L, B, H, S, P)
+  hybrid:          groups_* (G, per-group stacks) + shared_k/v per group site
+  encdec:          k, v + cross_k, cross_v (L, B, Hkv, enc_len, dh)
+
+Fused decode cache (``AttentionConfig.distr_decode``): for GQA archs the K
+cache additionally stores K̂ = fuse(K, perm_static) with a *static* per-layer
+permutation — at decode the score stage reads d/G* columns per token instead
+of d, cutting K-cache read bytes by (1-1/G*)·½ of KV traffic in the
+memory-bound decode regime (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grouping, lsh
+
+
+def _hybrid_layout(cfg):
+    n_groups = cfg.n_layers // cfg.attn_every
+    n_tail = cfg.n_layers - n_groups * cfg.attn_every
+    return n_groups, n_tail
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def cache_struct(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct tree for the cache (used by init & dry-run)."""
+    f = jax.ShapeDtypeStruct
+    dh = cfg.head_dim_
+    l, hkv = cfg.n_layers, cfg.n_kv_heads
+
+    if cfg.family == "encdec":
+        return {
+            "k": f((l, batch, hkv, max_len, dh), dtype),
+            "v": f((l, batch, hkv, max_len, dh), dtype),
+            "cross_k": f((l, batch, hkv, cfg.cross_len, dh), dtype),
+            "cross_v": f((l, batch, hkv, cfg.cross_len, dh), dtype),
+            "cross_len": f((batch,), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        return {
+            "conv": f((l, batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+            "ssm": f((l, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                     jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        g, t = _hybrid_layout(cfg)
+        cache = {
+            "groups_conv": f((g, cfg.attn_every, batch, cfg.ssm_conv - 1,
+                              conv_dim(cfg)), dtype),
+            "groups_ssm": f((g, cfg.attn_every, batch, cfg.ssm_heads,
+                             cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "shared_k": f((g, batch, hkv, max_len, dh), dtype),
+            "shared_v": f((g, batch, hkv, max_len, dh), dtype),
+        }
+        if t:
+            cache["tail_conv"] = f((t, batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype)
+            cache["tail_ssm"] = f((t, batch, cfg.ssm_heads, cfg.ssm_state,
+                                   cfg.ssm_head_dim), jnp.float32)
+        return cache
+    if cfg.use_mla:
+        return {
+            "ckv": f((l, batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": f((l, batch, max_len, cfg.qk_rope_dim), dtype),
+        }
+    cache = {
+        "k": f((l, batch, hkv, max_len, dh), dtype),
+        "v": f((l, batch, hkv, max_len, dh), dtype),
+    }
+    if cfg.attention.distr_decode:
+        g = cfg.attention.distr.group_size
+        # bf16 K̂: the bandwidth win is the point (KV read bytes drop by
+        # (1-1/G*)/2 of the K side; see benchmarks/distr_decode.py).
+        cache["k_fused"] = f((l, batch, hkv, max_len, dh // g), dtype)
+    return cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_struct(cfg, batch, max_len, dtype)
+    )
+
+
+def cache_pspecs(cfg, mesh, *, batch: int = 0, max_len: int = 0) -> dict:
+    """PartitionSpecs for the cache tree: batch → DP axes; the long/seq or
+    head dim → "model" per cfg.attn_shard (flash-decoding style for seq).
+
+    Axis assignments that don't divide the actual cache dims (e.g. batch=1
+    for long_500k) are dropped — pass batch/max_len to enable the check.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    seq_sharded = cfg.attn_shard == "seq"
+
+    def spec_for(key: str, ndim: int) -> P:
+        if key in ("k", "v", "cross_k", "cross_v", "k_fused"):
+            # (L, B, Hkv, S, dh)
+            return P(None, dp, None, "model", None) if seq_sharded else \
+                P(None, dp, "model", None, None)
+        if key in ("ckv", "krope"):  # (L, B, S, C)
+            return P(None, dp, "model", None)
+        if key == "ssm":  # (L, B, H, S, P)
+            return P(None, dp, "model", None, None)
+        if key == "conv":  # (L, B, k-1, conv_dim)
+            return P(None, dp, None, "model")
+        if key in ("groups_ssm",):  # (G, per, B, H, S, P)
+            return P(None, None, dp, "model", None, None)
+        if key in ("groups_conv",):  # (G, per, B, k-1, conv_dim)
+            return P(None, None, dp, None, "model")
+        if key in ("tail_ssm",):
+            return P(None, dp, "model", None, None)
+        if key in ("tail_conv",):
+            return P(None, dp, None, "model")
+        if key in ("shared_k", "shared_v"):  # (G, B, Hkv, S, dh)
+            return P(None, dp, "model", None, None)
+        return P(*([None] * ndim))
+
+    struct = cache_struct(cfg, max(batch, 1), max(max_len, 2))
+    axis_size = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+    def prune(spec: P, shape: tuple) -> P:
+        entries = []
+        for i, s in enumerate(spec):
+            if s is None:
+                entries.append(None)
+                continue
+            parts = s if isinstance(s, tuple) else (s,)
+            need = 1
+            for a in parts:
+                need *= axis_size.get(a, 1)
+            if batch and shape[i] % need:
+                entries.append(None)
+            else:
+                entries.append(s)
+        return P(*entries)
+
+    return {
+        k: prune(spec_for(k, len(v.shape)), v.shape) for k, v in struct.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fused-K̂ decode cache (beyond-paper DistrAttention extension)
+# ---------------------------------------------------------------------------
+
+
+def static_perms(cfg, n_layers: int | None = None) -> jnp.ndarray:
+    """Static per-(layer, kv-head) grouping permutations (L, Hkv, dh).
+
+    Derived from the fixed LSH projection seed; in production these would be
+    calibrated from prefill Q statistics — here they are seeded random, which
+    preserves the bandwidth story (the accuracy story is benchmarked in
+    benchmarks/distr_decode.py).
+    """
+    l = n_layers if n_layers is not None else cfg.n_layers
+    dh = cfg.head_dim_
+    key = jax.random.PRNGKey(cfg.attention.distr.proj_seed + 13)
+    perms = []
+    for i in range(l):
+        key, sub = jax.random.split(key)
+        perms.append(
+            jnp.stack([
+                jax.random.permutation(jax.random.fold_in(sub, h), dh)
+                for h in range(cfg.n_kv_heads)
+            ])
+        )
+    return jnp.stack(perms).astype(jnp.int32)  # (L, Hkv, dh)
+
+
+def fuse_new_k(k_new: jnp.ndarray, perm: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Fuse one decode step's K rows.  k_new: (B, Hkv, 1, dh); perm: (Hkv, dh)."""
+    return grouping.fuse_columns(k_new.astype(jnp.float32), perm[None], group_size)
+
+
+def sample_q(q: jnp.ndarray, perm: jnp.ndarray, group_size: int,
+             q_per_kv: int) -> jnp.ndarray:
+    """Sample Q columns under the per-kv-head static permutation.
+
+    q: (B, Hq, 1, dh); perm: (Hkv, dh) → (B, Hq, 1, dh/g).
+    """
+    b, hq, n, dh = q.shape
+    hkv = perm.shape[0]
+    qg = q.reshape(b, hkv, q_per_kv, n, dh)
+    idx = grouping.sampled_indices(perm, group_size)  # (Hkv, dh/g)
+    out = jnp.take_along_axis(qg, idx[None, :, None, None, :], axis=-1)
+    return out.reshape(b, hq, n, dh // group_size)

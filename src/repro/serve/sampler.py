@@ -1,0 +1,26 @@
+"""Token sampling: greedy / temperature / top-k, pure-functional."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jnp.ndarray,  # (B, 1, V) or (B, V)
+    *,
+    rng: jax.Array | None = None,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jnp.ndarray:
+    """→ (B,) int32 next tokens.  temperature 0 = greedy."""
+    if logits.ndim == 3:
+        logits = logits[:, -1, :]
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    assert rng is not None, "temperature sampling needs an rng"
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

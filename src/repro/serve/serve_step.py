@@ -1,0 +1,342 @@
+"""Serving steps: prefill (build cache from a full forward) and one-token
+decode, per architecture family.  Both are pure functions of (params, cache)
+so they jit cleanly under the production mesh — the decode shapes of the
+dry-run lower ``decode_step`` exactly as defined here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, lm, transformer
+from repro.models.attention import _split_heads
+from repro.serve import kv_cache
+
+
+def _compute_dtype(cfg):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def _pad_seq_to(x: jnp.ndarray, max_len: int, axis: int) -> jnp.ndarray:
+    pad = max_len - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def make_prefill(cfg, max_len: int):
+    """→ prefill(params, tokens, patches=None, frames=None) → (logits, cache).
+
+    logits: (B, 1, V) for the last position; cache: ready for decode at
+    position = prompt length.
+    """
+
+    def prefill(params, tokens, patches=None, frames=None):
+        hidden, _aux, parts, n_prefix = lm.backbone(
+            params, cfg, tokens, patches=patches, frames=frames,
+            collect_cache=True,
+        )
+        logits = lm.logits_fn(params, cfg, hidden[:, -1:])
+        cache: dict = {}
+        dtype = _compute_dtype(cfg)
+
+        if cfg.family in ("dense", "moe") and not cfg.use_mla:
+            k, v = parts["kv"]  # (L, B, Hkv, S, dh)
+            cache["k"] = _pad_seq_to(k.astype(dtype), max_len, 3)
+            cache["v"] = _pad_seq_to(v.astype(dtype), max_len, 3)
+            if cfg.attention.distr_decode:
+                from repro.core import grouping
+
+                g = cfg.attention.distr.group_size
+                perms = kv_cache.static_perms(cfg)  # (L, Hkv, dh)
+                # (L, 1, Hkv, dh) broadcasts over batch & seq inside fuse.
+                cache["k_fused"] = grouping.fuse_columns(
+                    cache["k"].astype(jnp.float32), perms[:, None], g
+                )
+        elif cfg.use_mla:
+            ckv, krope = parts["kv"]  # (L,B,S,C), (L,B,1,S,R)
+            cache["ckv"] = _pad_seq_to(ckv.astype(dtype), max_len, 2)
+            cache["krope"] = _pad_seq_to(krope[:, :, 0].astype(dtype), max_len, 2)
+        elif cfg.family == "ssm":
+            conv, ssm = parts["ssm"]
+            cache["conv"] = conv.astype(dtype)
+            cache["ssm"] = ssm
+        elif cfg.family == "hybrid":
+            conv_g, ssm_g = parts["ssm_groups"]
+            sk, sv = parts["shared_kv"]
+            cache["groups_conv"] = conv_g.astype(dtype)
+            cache["groups_ssm"] = ssm_g
+            cache["shared_k"] = _pad_seq_to(sk.astype(dtype), max_len, 3)
+            cache["shared_v"] = _pad_seq_to(sv.astype(dtype), max_len, 3)
+            if parts.get("ssm_tail") is not None:
+                conv_t, ssm_t = parts["ssm_tail"]
+                cache["tail_conv"] = conv_t.astype(dtype)
+                cache["tail_ssm"] = ssm_t
+        elif cfg.family == "encdec":
+            k, v = parts["kv"]
+            cache["k"] = _pad_seq_to(k.astype(dtype), max_len, 3)
+            cache["v"] = _pad_seq_to(v.astype(dtype), max_len, 3)
+            enc_out = parts["enc_out"]
+
+            def cross_kv(block_params):
+                ck = _split_heads(
+                    layers.linear_apply(block_params["cross_attn"]["wk"], enc_out),
+                    cfg.n_kv_heads,
+                )
+                cv = _split_heads(
+                    layers.linear_apply(block_params["cross_attn"]["wv"], enc_out),
+                    cfg.n_kv_heads,
+                )
+                return ck.astype(dtype), cv.astype(dtype)
+
+            ck, cv = jax.vmap(cross_kv)(params["blocks"])
+            cache["cross_k"] = _pad_seq_to(ck, cfg.cross_len, 3)[:, :, :, : cfg.cross_len]
+            cache["cross_v"] = _pad_seq_to(cv, cfg.cross_len, 3)[:, :, :, : cfg.cross_len]
+            cache["cross_len"] = jnp.full(
+                (tokens.shape[0],), min(enc_out.shape[1], cfg.cross_len), jnp.int32
+            )
+        return logits, cache
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def make_decode_step(cfg):
+    """→ decode_step(params, tokens (B,1), cache, pos (B,)) → (logits, cache)."""
+
+    def decode_step(params, tokens, cache, pos):
+        compute = _compute_dtype(cfg)
+        b = tokens.shape[0]
+        x = layers.embedding_apply(params["embed"], tokens, compute)
+        if cfg.pos == "learned":
+            x = x + layers.embedding_apply(
+                params["pos_embed"], pos[:, None], compute
+            )
+
+        if cfg.family in ("dense", "moe") and not cfg.use_mla:
+            new_cache = dict(cache)
+            if cfg.family == "moe" and cfg.first_dense_layers:
+                fd = cfg.first_dense_layers
+
+                def body_d(h, inputs):
+                    lp, k_l, v_l = inputs
+                    h, nc = transformer.block_decode_apply(
+                        lp, h, cfg, "dense",
+                        cache={"k": k_l, "v": v_l}, cache_index=pos,
+                    )
+                    return h, (nc["k"], nc["v"])
+
+                x, (kd, vd) = jax.lax.scan(
+                    body_d, x,
+                    (params["dense_blocks"], cache["k"][:fd], cache["v"][:fd]),
+                )
+                layer_type = "moe"
+
+                def body_m(h, inputs):
+                    lp, k_l, v_l = inputs
+                    h, nc = transformer.block_decode_apply(
+                        lp, h, cfg, layer_type,
+                        cache={"k": k_l, "v": v_l}, cache_index=pos,
+                    )
+                    return h, (nc["k"], nc["v"])
+
+                x, (km, vm) = jax.lax.scan(
+                    body_m, x, (params["blocks"], cache["k"][fd:], cache["v"][fd:])
+                )
+                new_cache["k"] = jnp.concatenate([kd, km], axis=0)
+                new_cache["v"] = jnp.concatenate([vd, vm], axis=0)
+            elif cfg.attention.distr_decode and cfg.family == "dense":
+                # Beyond-paper fused-K̂ decode: the score stage reads the
+                # d/G*-wide fused cache (see models.attention).
+                from repro.models.attention import attention_decode_fused
+                from repro.models.transformer import norm_apply
+
+                perms = kv_cache.static_perms(cfg)  # (L, Hkv, dh)
+
+                # The raw K cache is NOT streamed through the decode scan:
+                # the score stage reads only K̂ (+V).  Raw K stays as-is in
+                # the cache dict (stale for decode; re-fused at prefill) —
+                # this is where the (1-1/G*)·½ KV-read saving comes from.
+                def body_f(h, inputs):
+                    lp, v_l, kf_l, perm_l = inputs
+                    hn = norm_apply(lp["norm1"], h, cfg)
+                    o, (_, v2, kf2) = attention_decode_fused(
+                        lp["attn"], hn, cfg,
+                        cache_k=None, cache_v=v_l, cache_k_fused=kf_l,
+                        perm=perm_l, cache_index=pos,
+                    )
+                    h = h + o
+                    h2 = norm_apply(lp["norm2"], h, cfg)
+                    h = h + layers.mlp_apply(lp["ffn"], h2, act=cfg.act)
+                    return h, (v2, kf2)
+
+                x, (vs, kfs) = jax.lax.scan(
+                    body_f, x,
+                    (params["blocks"], cache["v"], cache["k_fused"], perms),
+                )
+                new_cache.update(v=vs, k_fused=kfs)
+            else:
+                layer_type = "moe" if cfg.family == "moe" else "dense"
+
+                def body(h, inputs):
+                    lp, k_l, v_l = inputs
+                    h, nc = transformer.block_decode_apply(
+                        lp, h, cfg, layer_type,
+                        cache={"k": k_l, "v": v_l}, cache_index=pos,
+                    )
+                    return h, (nc["k"], nc["v"])
+
+                x, (ks, vs) = jax.lax.scan(
+                    body, x, (params["blocks"], cache["k"], cache["v"])
+                )
+                new_cache["k"], new_cache["v"] = ks, vs
+        elif cfg.use_mla:
+            new_cache = dict(cache)
+            fd = cfg.first_dense_layers
+
+            # dense prefix
+            def body_mla_dense(h, inputs):
+                lp, ckv_l, kr_l = inputs
+                h, nc = transformer.block_decode_apply(
+                    lp, h, cfg, "dense",
+                    cache={"ckv": ckv_l, "krope": kr_l}, cache_index=pos,
+                )
+                return h, (nc["ckv"], nc["krope"])
+
+            parts_ckv, parts_kr = [], []
+            if fd:
+                x, (c1, r1) = jax.lax.scan(
+                    body_mla_dense, x,
+                    (params["dense_blocks"], cache["ckv"][:fd], cache["krope"][:fd]),
+                )
+                parts_ckv.append(c1)
+                parts_kr.append(r1)
+
+            def body_mla_moe(h, inputs):
+                lp, ckv_l, kr_l = inputs
+                h, nc = transformer.block_decode_apply(
+                    lp, h, cfg, "moe",
+                    cache={"ckv": ckv_l, "krope": kr_l}, cache_index=pos,
+                )
+                return h, (nc["ckv"], nc["krope"])
+
+            x, (c2, r2) = jax.lax.scan(
+                body_mla_moe, x,
+                (params["blocks"], cache["ckv"][fd:], cache["krope"][fd:]),
+            )
+            parts_ckv.append(c2)
+            parts_kr.append(r2)
+            new_cache["ckv"] = (
+                jnp.concatenate(parts_ckv, axis=0) if fd else parts_ckv[0]
+            )
+            new_cache["krope"] = (
+                jnp.concatenate(parts_kr, axis=0) if fd else parts_kr[0]
+            )
+        elif cfg.family == "ssm":
+
+            def body_ssm(h, inputs):
+                lp, conv_l, ssm_l = inputs
+                h, nc = transformer.block_decode_apply(
+                    lp, h, cfg, "mamba",
+                    cache={"conv": conv_l, "ssm": ssm_l}, cache_index=pos,
+                )
+                return h, (nc["conv"], nc["ssm"])
+
+            x, (convs, ssms) = jax.lax.scan(
+                body_ssm, x, (params["blocks"], cache["conv"], cache["ssm"])
+            )
+            new_cache = {"conv": convs, "ssm": ssms}
+        elif cfg.family == "hybrid":
+            x0 = x
+            nsb = cfg.n_shared_attn_blocks
+
+            def mamba_body(h, inputs):
+                lp, conv_l, ssm_l = inputs
+                h, nc = transformer.block_decode_apply(
+                    lp, h, cfg, "mamba",
+                    cache={"conv": conv_l, "ssm": ssm_l}, cache_index=pos,
+                )
+                return h, (nc["conv"], nc["ssm"])
+
+            shared_fns = [
+                functools.partial(
+                    transformer.shared_block_decode_apply, sp, cfg=cfg
+                )
+                for sp in params["shared"]
+            ]
+
+            def group_body(h, inputs):
+                gp, conv_g, ssm_g, sk, sv, gi = inputs
+                h, (conv_n, ssm_n) = jax.lax.scan(
+                    mamba_body, h, (gp, conv_g, ssm_g)
+                )
+                h, kv_n = jax.lax.switch(
+                    gi % nsb,
+                    [
+                        lambda hh, fn=fn: fn(
+                            hh, x0, cache={"k": sk, "v": sv}, cache_index=pos
+                        )
+                        for fn in shared_fns
+                    ],
+                    h,
+                )
+                return h, (conv_n, ssm_n, kv_n["k"], kv_n["v"])
+
+            n_groups, n_tail = kv_cache._hybrid_layout(cfg)
+            x, (conv_g, ssm_g, sks, svs) = jax.lax.scan(
+                group_body, x,
+                (
+                    params["groups"], cache["groups_conv"], cache["groups_ssm"],
+                    cache["shared_k"], cache["shared_v"], jnp.arange(n_groups),
+                ),
+            )
+            new_cache = dict(cache)
+            new_cache.update(
+                groups_conv=conv_g, groups_ssm=ssm_g, shared_k=sks, shared_v=svs
+            )
+            if n_tail:
+                x, (conv_t, ssm_t) = jax.lax.scan(
+                    mamba_body, x,
+                    (params["tail"], cache["tail_conv"], cache["tail_ssm"]),
+                )
+                new_cache.update(tail_conv=conv_t, tail_ssm=ssm_t)
+        elif cfg.family == "encdec":
+            cross_len = cache["cross_len"]
+
+            def body_ed(h, inputs):
+                lp, k_l, v_l, ck_l, cv_l = inputs
+                h, nc = transformer.block_decode_apply(
+                    lp, h, cfg, "dense",
+                    cache={"k": k_l, "v": v_l, "cross_k": ck_l, "cross_v": cv_l},
+                    cache_index=pos, cross_len=cross_len,
+                )
+                return h, (nc["k"], nc["v"])
+
+            x, (ks, vs) = jax.lax.scan(
+                body_ed, x,
+                (params["blocks"], cache["k"], cache["v"],
+                 cache["cross_k"], cache["cross_v"]),
+            )
+            new_cache = dict(cache)
+            new_cache.update(k=ks, v=vs)
+        else:
+            raise ValueError(cfg.family)
+
+        x = transformer.norm_apply(params["final_norm"], x, cfg)
+        logits = lm.logits_fn(params, cfg, x)
+        return logits, new_cache
+
+    return decode_step

@@ -1,0 +1,20 @@
+"""Training substrate: optimizer, data, checkpointing, compression, trainer."""
+from repro.train import (
+    checkpoint,
+    compression,
+    data,
+    elastic,
+    optimizer,
+    train_step,
+    trainer,
+)
+
+__all__ = [
+    "checkpoint",
+    "compression",
+    "data",
+    "elastic",
+    "optimizer",
+    "train_step",
+    "trainer",
+]

@@ -1,0 +1,126 @@
+"""Mesh-agnostic checkpointing with atomic rename + keep-k + resume.
+
+Checkpoints store full (unsharded) tensors keyed by pytree path, so a job can
+restart on a different device count / mesh shape — the elasticity story: the
+restore path simply device_puts onto whatever shardings the new mesh derives.
+Writes go to ``<dir>/tmp.<step>`` then ``os.replace`` to ``step_<N>`` so a
+crash mid-save never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray]):
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing tensor {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}"
+            )
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def save_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    params,
+    opt_state=None,
+    data_state: dict | None = None,
+    *,
+    extra_meta: dict | None = None,
+    keep: int = 3,
+) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+    meta = {"step": step, "data_state": data_state or {}}
+    meta.update(extra_meta or {})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = list_checkpoints(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def list_checkpoints(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_checkpoints(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(
+    ckpt_dir: str,
+    params_template,
+    opt_template=None,
+    *,
+    step: int | None = None,
+):
+    """→ (step, params, opt_state, meta).  Templates supply structure/dtypes
+    (e.g. from jax.eval_shape) — tensors come back as host numpy, ready for
+    device_put under any mesh."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    params = _unflatten_into(
+        params_template, dict(np.load(os.path.join(path, "params.npz")))
+    )
+    opt_state = None
+    if opt_template is not None and os.path.exists(os.path.join(path, "opt_state.npz")):
+        opt_state = _unflatten_into(
+            opt_template, dict(np.load(os.path.join(path, "opt_state.npz")))
+        )
+    return step, params, opt_state, meta

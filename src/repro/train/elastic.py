@@ -1,0 +1,91 @@
+"""Elasticity, failure handling, straggler mitigation — the control-plane
+logic (pure, unit-tested); the data plane is mesh-agnostic checkpoints
+(train.checkpoint) + reshard-on-restore (distributed.sharding).
+
+At 1000+ nodes the failure model is: a pod/host drops → the job controller
+(1) drains, (2) emergency-checkpoints from surviving hosts, (3) replans the
+mesh for the surviving device count, (4) restarts from the latest step with
+a deterministic re-assignment of data shards.  These helpers implement the
+deterministic pieces of that loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+def reassign_shards(num_shards: int, alive_workers: list[int]) -> dict[int, list[int]]:
+    """Deterministic round-robin data-shard → surviving-worker assignment.
+
+    Restart-safe: depends only on (num_shards, sorted alive set).
+    """
+    alive = sorted(alive_workers)
+    if not alive:
+        raise ValueError("no surviving workers")
+    out: dict[int, list[int]] = {w: [] for w in alive}
+    for s in range(num_shards):
+        out[alive[s % len(alive)]].append(s)
+    return out
+
+
+def replan_mesh(n_devices: int, *, model_parallel: int = 16,
+                pods: int | None = None) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest (pod, data, model) mesh fitting the surviving device count.
+
+    Keeps TP fixed (model_parallel must divide per-pod devices — resharding
+    TP means re-tiling every weight, whereas shrinking DP is free with
+    mesh-agnostic checkpoints).
+    """
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by TP={model_parallel}")
+    data = n_devices // model_parallel
+    if pods and pods > 1:
+        if data % pods:
+            pods = 1  # fall back to single logical pod
+        else:
+            return (pods, data // pods, model_parallel), ("pod", "data", "model")
+    return (data, model_parallel), ("data", "model")
+
+
+@dataclass
+class StragglerPolicy:
+    """Flag workers whose step time exceeds ``threshold``× the median.
+
+    The trainer reacts by (a) logging, (b) after ``patience`` consecutive
+    flags, excluding the worker and triggering the elastic replan path.
+    """
+
+    threshold: float = 2.0
+    patience: int = 3
+
+    def flag(self, step_times: dict[int, float]) -> list[int]:
+        if not step_times:
+            return []
+        times = sorted(step_times.values())
+        median = times[len(times) // 2]
+        return [w for w, t in step_times.items() if t > self.threshold * median]
+
+
+class FailureDetector:
+    """Heartbeat bookkeeping: a worker missing ``max_missed`` beats is dead."""
+
+    def __init__(self, workers: list[int], max_missed: int = 3):
+        self.max_missed = max_missed
+        self._missed = {w: 0 for w in workers}
+
+    def beat(self, worker: int) -> None:
+        if worker in self._missed:
+            self._missed[worker] = 0
+
+    def tick(self) -> list[int]:
+        """Advance one heartbeat interval; returns newly-dead workers."""
+        dead = []
+        for w in list(self._missed):
+            self._missed[w] += 1
+            if self._missed[w] >= self.max_missed:
+                dead.append(w)
+                del self._missed[w]
+        return dead
+
+    @property
+    def alive(self) -> list[int]:
+        return sorted(self._missed)

@@ -1,0 +1,101 @@
+"""AdamW + LR schedules (cosine, WSD) — built from scratch (no optax here).
+
+Optimizer state is a pytree congruent with params, so the FSDP/TP shardings
+derived for parameters apply 1:1 to the moments (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_norm
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1  # WSD: final fraction of steps spent decaying
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    grad_accum: int = 1  # microbatch accumulation steps
+
+
+def schedule(opt_cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Learning rate at ``step`` (traced-friendly)."""
+    step = step.astype(jnp.float32)
+    warm = opt_cfg.warmup_steps
+    total = opt_cfg.total_steps
+    peak = opt_cfg.peak_lr
+    floor = peak * opt_cfg.min_lr_ratio
+
+    warmup_lr = peak * step / jnp.maximum(warm, 1)
+
+    if opt_cfg.schedule == "constant":
+        post = jnp.full_like(step, peak)
+    elif opt_cfg.schedule == "cosine":
+        frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        post = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    elif opt_cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (minicpm): hold at peak, then linear decay over
+        # the final wsd_decay_frac of training.
+        decay_steps = jnp.maximum(total * opt_cfg.wsd_decay_frac, 1)
+        decay_start = total - decay_steps
+        frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        post = peak - (peak - floor) * frac
+    else:
+        raise ValueError(f"unknown schedule {opt_cfg.schedule!r}")
+    return jnp.where(step < warm, warmup_lr, post)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(params, grads, state, opt_cfg: OptimizerConfig, lr):
+    """One AdamW step → (new_params, new_state)."""
+    count = state["count"] + 1
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        m_hat = m / c1
+        v_hat = v / c2
+        step_ = m_hat / (jnp.sqrt(v_hat) + opt_cfg.eps)
+        if opt_cfg.weight_decay and jnp.issubdtype(p.dtype, jnp.floating):
+            step_ = step_ + opt_cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,144 @@
+"""Training loop: jit + shardings, NaN guards, periodic + emergency
+checkpointing, automatic resume.  Runs identically on 1 CPU device (examples)
+and under the production mesh (launch/train.py).
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import make_train_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg,
+        opt_cfg: opt_mod.OptimizerConfig,
+        dataset,
+        *,
+        workdir: str,
+        mesh=None,
+        seed: int = 0,
+        log_every: int = 10,
+        ckpt_every: int = 200,
+        nan_policy: str = "skip",  # skip | halt
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.dataset = dataset
+        self.workdir = workdir
+        self.mesh = mesh
+        self.log_every = log_every
+        self.ckpt_every = ckpt_every
+        self.nan_policy = nan_policy
+        self.ckpt_dir = os.path.join(workdir, "checkpoints")
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+
+        key = jax.random.PRNGKey(seed)
+        p_shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+        o_shapes = jax.eval_shape(opt_mod.adamw_init, p_shapes)
+
+        self.step = 0
+        resume = ckpt.latest_step(self.ckpt_dir)
+        if resume is not None:
+            self.step, params, opt_state, meta = ckpt.load_checkpoint(
+                self.ckpt_dir, p_shapes, o_shapes
+            )
+            if meta.get("data_state"):
+                self.dataset.restore(meta["data_state"])
+            print(f"[trainer] resumed from step {self.step}")
+        else:
+            params = lm.init_params(key, cfg)
+            opt_state = opt_mod.adamw_init(params)
+
+        if mesh is not None:
+            axes = lm.param_axes(cfg)
+            p_shard = shd.param_shardings(axes, p_shapes, mesh, fsdp=cfg.fsdp)
+            o_shard = {
+                "m": p_shard,
+                "v": p_shard,
+                "count": shd.replicated(mesh),
+            }
+            self.params = jax.tree_util.tree_map(jax.device_put, params, p_shard)
+            self.opt_state = jax.tree_util.tree_map(
+                jax.device_put, opt_state, o_shard
+            )
+            self._step_fn = jax.jit(
+                make_train_step(cfg, opt_cfg),
+                donate_argnums=(0, 1),
+            )
+        else:
+            self.params = params
+            self.opt_state = opt_state
+            self._step_fn = jax.jit(
+                make_train_step(cfg, opt_cfg), donate_argnums=(0, 1)
+            )
+
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _checkpoint(self, tag: str = "") -> None:
+        ckpt.save_checkpoint(
+            self.ckpt_dir,
+            self.step,
+            self.params,
+            self.opt_state,
+            self.dataset.state(),
+            extra_meta={"tag": tag, "arch": self.cfg.name},
+        )
+
+    def run(self, num_steps: int) -> list[dict]:
+        target = self.step + num_steps
+        try:
+            while self.step < target:
+                batch = self.dataset.next_batch()
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                t0 = time.perf_counter()
+                new_params, new_opt, metrics = self._step_fn(
+                    self.params, self.opt_state, batch,
+                    jnp.asarray(self.step, jnp.int32),
+                )
+                loss = float(metrics["loss"])
+                skipped = float(metrics.get("skipped", 0.0)) > 0
+                self.params, self.opt_state = new_params, new_opt
+                if skipped:
+                    # update was suppressed inside the jitted step (NaN guard)
+                    if self.nan_policy == "halt":
+                        self._checkpoint(tag="nan-halt")
+                        raise FloatingPointError(f"NaN loss at step {self.step}")
+                    print(f"[trainer] step {self.step}: non-finite loss, skipped")
+                dt = time.perf_counter() - t0
+                self.step += 1
+                rec = {"step": self.step, "loss": loss,
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "lr": float(metrics["lr"]), "sec": dt}
+                self.history.append(rec)
+                if self.step % self.log_every == 0:
+                    print(
+                        f"[trainer] step {rec['step']:>6} "
+                        f"loss {rec['loss']:.4f} gnorm {rec['grad_norm']:.3f} "
+                        f"lr {rec['lr']:.2e} {dt*1e3:.0f} ms"
+                    )
+                if self.step % self.ckpt_every == 0:
+                    self._checkpoint()
+        except KeyboardInterrupt:
+            self._checkpoint(tag="interrupt")
+            raise
+        except Exception:
+            # fault tolerance: best-effort emergency save before propagating
+            try:
+                self._checkpoint(tag="emergency")
+            except Exception:
+                pass
+            raise
+        self._checkpoint(tag="final")
+        return self.history

@@ -1,0 +1,9 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_cast,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_norm,
+)

@@ -1,0 +1,52 @@
+"""Block-size selection model (paper §3.3.1, TPU re-derivation)."""
+from repro.core.block_size import (
+    LANE,
+    TpuSpec,
+    enumerate_block_sizes,
+    io_count,
+    select_block_sizes,
+    working_set_bytes,
+)
+
+
+def test_io_count_prefers_large_l():
+    """The paper's I(l, m): independent of m, monotonically better in l."""
+    n, d = 4096, 128
+    ios = [io_count(l, n, d) for l in (128, 256, 512)]
+    assert ios[0] > ios[1] > ios[2]
+
+
+def test_selection_is_aligned_and_fits():
+    for d in (32, 64, 128, 256):
+        for g in (1, 2):
+            l, m = select_block_sizes(d, group_size=g)
+            assert l % LANE == 0 and m % LANE == 0
+            assert working_set_bytes(l, m, d, group_size=g) <= int(
+                TpuSpec().vmem_bytes * TpuSpec().usable_fraction
+            )
+
+
+def test_selection_maximises_l_first():
+    """Mirrors the paper's rule: among legal configs, chosen l is maximal,
+    and m is maximal given that l."""
+    for d in (64, 128):
+        l, m = select_block_sizes(d)
+        legal = enumerate_block_sizes(d)
+        max_l = max(x[0] for x in legal)
+        assert l == max_l
+        assert m == max(x[1] for x in legal if x[0] == l)
+
+
+def test_distr_grouping_frees_vmem():
+    """G*>1 shrinks the score-stage working set ⇒ same-or-larger blocks."""
+    d = 256
+    l1, m1 = select_block_sizes(d, group_size=1, max_l=2048, max_m=2048)
+    l2, m2 = select_block_sizes(d, group_size=2, max_l=2048, max_m=2048)
+    assert (l2, m2) >= (l1, m1)
+
+
+def test_working_set_components():
+    base = working_set_bytes(128, 128, 128)
+    with_distr = working_set_bytes(128, 128, 128, group_size=2)
+    # distr adds q̂ and k̂ buffers
+    assert with_distr > base

@@ -1,0 +1,146 @@
+"""DistrAttention core semantics (paper §3) — the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AttentionConfig,
+    DistrConfig,
+    attend,
+    blockwise_flash_reference,
+    distr_attention,
+    distr_scores,
+    reference_attention,
+)
+
+
+def _qkv(seed, b=2, hq=4, hkv=4, n=128, d=64, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, n, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, n, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, n, d), dtype)
+    return q, k, v
+
+
+def test_group_size_one_is_exact():
+    """G*=1 ⇒ sampling+fusion is a pure permutation ⇒ Ŝ == S exactly."""
+    q, k, v = _qkv(0)
+    out = distr_attention(q, k, v, DistrConfig(group_size=1, block_q=32), causal=True)
+    ref = reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_duplicated_columns_are_exact_at_g2():
+    """If every Q/K column appears exactly twice, grouping the duplicates
+    makes the distributive approximation EXACT (paper Eq. 1).
+
+    Duplicates are interleaved (col 2i == col 2i+1): identical columns hash
+    identically and the stable sort keeps them adjacent, so every group is a
+    true duplicate pair even when two distinct columns collide in hash.
+    """
+    b, h, n, d = 1, 1, 64, 32
+    qh = jax.random.normal(jax.random.PRNGKey(1), (b, h, n, d // 2))
+    kh = jax.random.normal(jax.random.PRNGKey(2), (b, h, n, d // 2))
+    q = jnp.repeat(qh, 2, axis=-1)
+    k = jnp.repeat(kh, 2, axis=-1)
+    s_hat = distr_scores(q, k, DistrConfig(group_size=2, block_q=16))
+    s = jnp.einsum("bhnd,bhmd->bhnm", q, k)
+    np.testing.assert_allclose(np.asarray(s_hat), np.asarray(s), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("g", [2, 4, 8])
+def test_error_grows_with_sampling_rate(g):
+    """Paper Table 4: error increases with G* (checked on gaussian data)."""
+    q, k, _ = _qkv(3, b=1, hq=1, hkv=1, n=64, d=64)
+    s = jnp.einsum("bhnd,bhmd->bhnm", q, k)
+    err_g = float(
+        jnp.abs(distr_scores(q, k, DistrConfig(group_size=g, block_q=16)) - s).mean()
+    )
+    err_1 = float(
+        jnp.abs(distr_scores(q, k, DistrConfig(group_size=1, block_q=16)) - s).mean()
+    )
+    assert err_g > err_1
+
+
+def test_output_rows_are_convex_combinations_of_v():
+    """Softmax is untouched by the approximation ⇒ outputs stay within the
+    per-feature [min, max] of V (full-context invariant)."""
+    q, k, v = _qkv(4)
+    out = distr_attention(q, k, v, DistrConfig(group_size=4, block_q=32))
+    v_min = v.min(axis=2, keepdims=True) - 1e-4
+    v_max = v.max(axis=2, keepdims=True) + 1e-4
+    assert bool(((out >= v_min) & (out <= v_max)).all())
+
+
+def test_gqa_and_shared_kv_perm():
+    q, k, v = _qkv(5, hq=8, hkv=2)
+    o1 = distr_attention(q, k, v, DistrConfig(group_size=2, block_q=32), causal=True)
+    o2 = distr_attention(
+        q, k, v, DistrConfig(group_size=2, block_q=32, shared_kv_perm=True),
+        causal=True,
+    )
+    ref = reference_attention(q, k, v, causal=True)
+    assert o1.shape == ref.shape == o2.shape
+    # both approximations stay close to the exact output
+    assert float(jnp.abs(o1 - ref).mean()) < 0.3
+    assert float(jnp.abs(o2 - ref).mean()) < 0.3
+
+
+def test_q_exact_slice_matches_concat_at_g1():
+    """The MLA split-score path must equal attention over concatenated
+    features when grouping is disabled."""
+    b, h, n = 1, 2, 64
+    q, k, v = _qkv(6, b=b, hq=h, hkv=h, n=n, d=64)
+    qe = jax.random.normal(jax.random.PRNGKey(7), (b, h, n, 16))
+    ke = jax.random.normal(jax.random.PRNGKey(8), (b, h, n, 16))
+    scale = 1.0 / (80.0**0.5)
+    out = distr_attention(
+        q, k, v, DistrConfig(group_size=1, block_q=16),
+        causal=True, scale=scale, q_exact=qe, k_exact=ke,
+    )
+    ref = reference_attention(
+        jnp.concatenate([q, qe], -1), jnp.concatenate([k, ke], -1), v,
+        causal=True, scale=scale,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_padding_path():
+    q, k, v = _qkv(9, n=100)  # not a multiple of block_q
+    out = distr_attention(q, k, v, DistrConfig(group_size=2, block_q=32), causal=True)
+    assert out.shape == q.shape
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_attend_dispatch_all_impls():
+    q, k, v = _qkv(10, n=64)
+    ref = attend(q, k, v, AttentionConfig(impl="reference"), causal=True)
+    for impl in ("xla_flash", "distr", "pallas_flash", "pallas_distr"):
+        cfg = AttentionConfig(
+            impl=impl, block_q=32, block_k=32,
+            distr=DistrConfig(group_size=2, block_q=32, block_k=32),
+        )
+        out = attend(q, k, v, cfg, causal=True)
+        assert out.shape == ref.shape
+        assert bool(jnp.isfinite(out).all())
+        if impl == "xla_flash":
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_reference_exactness_rectangular():
+    q, k, v = _qkv(11, n=96)
+    ref = reference_attention(q, k, v, causal=False)
+    out = blockwise_flash_reference(q, k, v, block_q=32, block_k=48, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([2, 4]), st.sampled_from([16, 32]))
+def test_distr_softmax_rows_convex_property(seed, g, block):
+    q, k, v = _qkv(seed, b=1, hq=2, hkv=2, n=64, d=32)
+    out = distr_attention(q, k, v, DistrConfig(group_size=g, block_q=block))
+    assert bool(jnp.isfinite(out).all())
+    assert float(out.max()) <= float(v.max()) + 1e-3
+    assert float(out.min()) >= float(v.min()) - 1e-3

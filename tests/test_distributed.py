@@ -1,0 +1,232 @@
+"""Distributed runtime tests.
+
+Multi-device cases run in a subprocess with 8 forced host devices (the main
+test process keeps 1 device so everything else stays fast)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.distributed import sharding as shd
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(body: str):
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        """
+        % SRC
+    ) + textwrap.dedent(body)
+    res = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=420,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    return res.stdout
+
+
+# ---------------------------------------------------------------------------
+# single-process logic
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_rules():
+    import jax.numpy as jnp
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    axes = {"w": (None, "mlp"), "e": ("experts", None, None), "s": (None,)}
+    shapes = {
+        "w": jax.ShapeDtypeStruct((4096, 8192), jnp.float32),
+        "e": jax.ShapeDtypeStruct((16, 64, 64), jnp.float32),
+        "s": jax.ShapeDtypeStruct((64,), jnp.float32),
+    }
+    specs = shd.param_pspecs(axes, shapes, mesh, fsdp=True)
+    assert specs["w"][1] == "model"
+    assert specs["w"][0] == "data"  # FSDP on the large unsharded dim
+    assert specs["e"][0] == "experts" or specs["e"][0] == "model"
+    assert specs["s"] == jax.sharding.PartitionSpec(None)
+
+
+def test_param_specs_divisibility_guard():
+    import jax.numpy as jnp
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # 16-way axes in the production mesh wouldn't divide 3352 — simulate via
+    # rule check with a fake mesh of size 1 (always divides) plus direct call
+    spec = shd._spec_for((None, "mlp"), (768, 3352), FakeMesh(), fsdp=False,
+                         stacked=False)
+    assert spec[1] is None  # dropped: 3352 % 16 != 0
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_dp_axes_for_divisibility():
+    mesh = FakeMesh()
+    assert shd.dp_axes_for(mesh, 256) == ("data",)
+    assert shd.dp_axes_for(mesh, 1) is None
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    _run_subprocess(
+        """
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.train.optimizer import OptimizerConfig, adamw_init
+        from repro.train.train_step import make_train_step
+        from repro.distributed import sharding as shd
+
+        cfg = get_config("qwen1.5-4b", reduced=True)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0, cfg.vocab),
+        }
+        opt_cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10)
+        step = make_train_step(cfg, opt_cfg)
+
+        # single-device reference
+        p1, _, m1 = jax.jit(step)(params, opt, batch, jnp.asarray(0))
+
+        # sharded
+        p_shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+        shardings = shd.param_shardings(lm.param_axes(cfg), p_shapes, mesh, fsdp=True)
+        params_s = jax.tree_util.tree_map(jax.device_put, params, shardings)
+        batch_s = {k: jax.device_put(v, NamedSharding(mesh, P("data"))) for k, v in batch.items()}
+        with jax.sharding.set_mesh(mesh):
+            p2, _, m2 = jax.jit(step)(params_s, jax.tree_util.tree_map(jnp.asarray, opt), batch_s, jnp.asarray(0))
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3, (m1["loss"], m2["loss"])
+        d = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)).max()), p1, p2)
+        worst = max(jax.tree_util.tree_leaves(d))
+        assert worst < 5e-3, worst
+        print("SHARDED OK", worst)
+        """
+    )
+
+
+@pytest.mark.slow
+def test_moe_ep_paths_match_dense():
+    _run_subprocess(
+        """
+        from repro.configs import get_config
+        from repro.models import moe, lm
+
+        cfg = get_config("llama4-scout-17b-a16e", reduced=True)
+        cfg = cfg.replace(capacity_factor=8.0)  # no drops: paths comparable
+        params = moe.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+
+        y_ref, aux_ref = moe._moe_dense_onehot(params, x, cfg)
+        with jax.sharding.set_mesh(mesh):
+            am = jax.sharding.get_abstract_mesh()
+            y_a2a, aux_a2a = jax.jit(lambda p, xx: moe._moe_ep_a2a(p, xx, cfg, am))(params, x)
+            y_psum, aux_psum = jax.jit(lambda p, xx: moe._moe_ep_psum(p, xx, cfg, am))(params, x)
+        e1 = float(jnp.abs(y_ref - y_a2a).max())
+        e2 = float(jnp.abs(y_ref - y_psum).max())
+        assert e1 < 1e-3, e1
+        assert e2 < 1e-3, e2
+        print("MOE OK", e1, e2)
+        """
+    )
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    _run_subprocess(
+        """
+        from repro.distributed.pipeline import pipeline_apply, stage_split
+        mesh2 = jax.make_mesh((4, 2), ("pod", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        L, D = 8, 16
+        ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.2
+
+        def stage_fn(stage_params, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, stage_params)
+            return y
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (6, 4, D))  # 6 microbatches
+        stages = stage_split(ws, 4)  # (4, 2, D, D)
+        with jax.sharding.set_mesh(mesh2):
+            out = pipeline_apply(stage_fn, stages, x, mesh2, axis="pod")
+        want = jax.vmap(lambda mb: stage_fn(ws, mb))(x)
+        err = float(jnp.abs(out - want).max())
+        assert err < 1e-5, err
+        print("PIPELINE OK", err)
+        """
+    )
+
+
+@pytest.mark.slow
+def test_ring_allgather_matmul_and_psum_scatter():
+    _run_subprocess(
+        """
+        from repro.distributed.collectives import (
+            psum_scatter_matmul, ring_allgather_matmul,
+        )
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        with jax.sharding.set_mesh(mesh):
+            y = ring_allgather_matmul(x, w, mesh, axis="model")
+            y2 = psum_scatter_matmul(x, w, mesh, axis="model")
+        err = float(jnp.abs(y - x @ w).max())
+        assert err < 1e-4, err
+        err2 = float(jnp.abs(jnp.asarray(y2) - x @ w).max())
+        assert err2 < 1e-4, err2
+        print("COLLECTIVES OK", err, err2)
+        """
+    )
+
+
+@pytest.mark.slow
+def test_ef_pmean_compressed_allreduce():
+    _run_subprocess(
+        """
+        from repro.train.compression import ef_pmean
+
+        g = jax.random.normal(jax.random.PRNGKey(2), (2, 16))
+
+        def local(gl):
+            mean, new_r = ef_pmean({"g": gl}, {"g": jnp.zeros_like(gl)}, "data")
+            return mean["g"], new_r["g"]
+
+        gs = jax.device_put(g, NamedSharding(mesh, P("data", None)))
+        with jax.sharding.set_mesh(mesh):
+            mean_g, _ = jax.jit(jax.shard_map(
+                local, mesh=mesh,
+                in_specs=P("data", None),
+                out_specs=(P("data", None), P("data", None)),
+            ))(gs)
+        exact = jnp.broadcast_to(g.mean(0, keepdims=True), g.shape)
+        # int8 quantization error bound: scale/2 per shard
+        err = float(jnp.abs(jnp.asarray(mean_g) - exact).max())
+        assert err < float(jnp.abs(g).max()) / 127 + 1e-5, err
+        print("EF PMEAN OK", err)
+        """
+    )

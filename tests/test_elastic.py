@@ -1,0 +1,55 @@
+"""Elasticity / fault-tolerance control-plane logic."""
+import pytest
+
+from repro.train.elastic import (
+    FailureDetector,
+    StragglerPolicy,
+    reassign_shards,
+    replan_mesh,
+)
+
+
+def test_reassign_shards_deterministic_and_complete():
+    a = reassign_shards(10, [0, 2, 5])
+    b = reassign_shards(10, [5, 0, 2])  # order-independent
+    assert a == b
+    assert sorted(s for shards in a.values() for s in shards) == list(range(10))
+    # balanced within 1
+    sizes = [len(v) for v in a.values()]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_reassign_no_survivors_raises():
+    with pytest.raises(ValueError):
+        reassign_shards(4, [])
+
+
+def test_replan_mesh_shrinks_dp_keeps_tp():
+    shape, axes = replan_mesh(512, model_parallel=16, pods=2)
+    assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+    # lose a pod → single-pod plan
+    shape, axes = replan_mesh(256, model_parallel=16, pods=1)
+    assert shape == (16, 16) and axes == ("data", "model")
+    # lose 16 chips → DP shrinks, TP unchanged
+    shape, axes = replan_mesh(240, model_parallel=16)
+    assert shape == (15, 16)
+    with pytest.raises(ValueError):
+        replan_mesh(250, model_parallel=16)
+
+
+def test_straggler_policy():
+    pol = StragglerPolicy(threshold=2.0)
+    flags = pol.flag({0: 1.0, 1: 1.1, 2: 5.0, 3: 0.9})
+    assert flags == [2]
+    assert pol.flag({}) == []
+
+
+def test_failure_detector():
+    det = FailureDetector([0, 1, 2], max_missed=2)
+    det.beat(0)
+    det.beat(1)
+    assert det.tick() == []  # everyone at 1 missed
+    det.beat(0)
+    dead = det.tick()  # 1 and 2 reach 2 missed
+    assert set(dead) == {1, 2}
+    assert det.alive == [0]

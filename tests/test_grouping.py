@@ -1,0 +1,76 @@
+"""Sampling/fusion unit + hypothesis property tests (paper §3.1-3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grouping
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+def test_fuse_columns_matches_manual():
+    x = _rand(0, (4, 8))
+    perm = jnp.asarray([3, 1, 0, 2, 7, 5, 6, 4], jnp.int32)[None]
+    out = grouping.fuse_columns(x[None], perm, 2)[0]
+    manual = np.stack(
+        [
+            np.asarray(x)[:, [3, 1]].sum(1),
+            np.asarray(x)[:, [0, 2]].sum(1),
+            np.asarray(x)[:, [7, 5]].sum(1),
+            np.asarray(x)[:, [6, 4]].sum(1),
+        ],
+        axis=1,
+    )
+    np.testing.assert_allclose(np.asarray(out), manual, rtol=1e-6)
+
+
+def test_sample_columns_picks_first_of_group():
+    x = _rand(1, (4, 8))
+    perm = jnp.arange(8, dtype=jnp.int32)[None]
+    out = grouping.sample_columns(x[None], perm, 4)[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x)[:, [0, 4]])
+
+
+def test_group_size_one_is_pure_permutation():
+    x = _rand(2, (5, 16))
+    perm = jax.random.permutation(jax.random.PRNGKey(9), 16)[None].astype(jnp.int32)
+    fused = grouping.fuse_columns(x[None], perm, 1)[0]
+    sampled = grouping.sample_columns(x[None], perm, 1)[0]
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(x)[:, np.asarray(perm[0])])
+    np.testing.assert_allclose(np.asarray(sampled), np.asarray(fused))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 4).map(lambda k: 2**k),  # group size
+    st.integers(0, 100),
+)
+def test_fusion_preserves_total_sum(g, seed):
+    """Σ_j k̂_j == Σ_i k_i — fusion is a partition of the d columns."""
+    d = 32
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 6, d))
+    perm = jax.random.permutation(
+        jax.random.PRNGKey(seed + 1), d
+    )[None, None].astype(jnp.int32)
+    perm = jnp.broadcast_to(perm, (3, 1, d)).reshape(3, d)[:, None, :]
+    fused = grouping.fuse_columns(x, jnp.broadcast_to(perm[:, 0], (3, d)), g)
+    np.testing.assert_allclose(
+        np.asarray(fused.sum(-1)), np.asarray(x.sum(-1)), rtol=2e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 50))
+def test_mean_estimator_matches_fuse_over_g(seed):
+    g, d = 4, 32
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 5, d))
+    perm = jnp.broadcast_to(
+        jax.random.permutation(jax.random.PRNGKey(seed + 1), d).astype(jnp.int32),
+        (2, d),
+    )
+    mean = grouping.mean_columns(x, perm, g)
+    fuse = grouping.fuse_columns(x, perm, g)
+    np.testing.assert_allclose(np.asarray(mean) * g, np.asarray(fuse), rtol=1e-6)

@@ -1,0 +1,66 @@
+"""LSH hashing unit + property tests (paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsh
+
+
+def test_projection_shape_and_values():
+    proj = lsh.make_projection(jax.random.PRNGKey(0), 64)
+    assert proj.shape == (lsh.N_PRIME, 64)
+    assert set(np.unique(np.asarray(proj))) <= {-1.0, 1.0}
+
+
+def test_inverse_gray_is_bijection_16bit():
+    codes = jnp.arange(2**16, dtype=jnp.uint32)
+    decoded = np.asarray(lsh.inverse_gray(codes))
+    assert len(np.unique(decoded & 0xFFFF)) == 2**16
+
+
+def test_inverse_gray_adjacent_ranks_differ_one_bit():
+    # gray(r) ^ gray(r+1) has exactly one bit set; inverse_gray inverts gray.
+    r = np.arange(2**12, dtype=np.uint32)
+    gray = r ^ (r >> 1)
+    dec = np.asarray(lsh.inverse_gray(jnp.asarray(gray)))
+    assert np.array_equal(dec, r)
+
+
+@pytest.mark.parametrize("method", ["sign_gray", "proj_morton"])
+def test_hash_columns_shape_determinism(method):
+    key = jax.random.PRNGKey(1)
+    block = jax.random.normal(key, (3, 2, 32, 64))
+    proj = lsh.make_projection(jax.random.PRNGKey(0), 32)
+    h1 = lsh.hash_columns(block, proj, method)
+    h2 = lsh.hash_columns(block, proj, method)
+    assert h1.shape == (3, 2, 64)
+    assert jnp.array_equal(h1, h2)
+
+
+@pytest.mark.parametrize("method", ["sign_gray", "proj_morton"])
+def test_permutation_is_valid(method):
+    block = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 128))
+    proj = lsh.make_projection(jax.random.PRNGKey(0), 16)
+    perm = lsh.lsh_permutation(block, proj, method)
+    for p in np.asarray(perm).reshape(-1, 128):
+        assert sorted(p.tolist()) == list(range(128))
+
+
+def test_similar_columns_group_together():
+    """Duplicated columns must receive adjacent hash ranks."""
+    key = jax.random.PRNGKey(3)
+    half = jax.random.normal(key, (32, 32))
+    block = jnp.concatenate([half, half], axis=1)  # d=64, dup pairs (i, i+32)
+    proj = lsh.make_projection(jax.random.PRNGKey(0), 32)
+    h = np.asarray(lsh.hash_columns(block, proj, "sign_gray"))
+    assert np.array_equal(h[:32], h[32:])  # identical columns → identical hash
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_inverse_gray_roundtrip_property(x):
+    g = np.uint32(x ^ (x >> 1))
+    decoded = int(lsh.inverse_gray(jnp.asarray([g], jnp.uint32))[0]) & 0xFFFFFFFF
+    assert decoded == x  # compare unsigned (hash is int32-typed)

@@ -1,0 +1,89 @@
+"""HLO cost walker: validated against hand-computable modules."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline import analysis as A
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_shape_bytes():
+    assert A._shape_bytes("f32", "4,8") == 128
+    assert A._shape_bytes("bf16", "10") == 20
+    assert A._shape_bytes("pred", "") == 1
+
+
+def test_scan_trip_count_multiplication():
+    def f(w, x):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cost = A.hlo_cost(_compiled_text(f, w, x))
+    assert cost["flops"] == pytest.approx(7 * 2 * 128**3, rel=0.02)
+
+
+def test_nested_scan_multiplies():
+    def f(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = A.hlo_cost(_compiled_text(f, w, x))
+    assert cost["flops"] == pytest.approx(15 * 2 * 64**3, rel=0.02)
+
+
+def test_einsum_batched_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b).sum()
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    cost = A.hlo_cost(_compiled_text(f, a, b))
+    assert cost["flops"] == pytest.approx(2 * 4 * 32 * 64 * 16, rel=0.02)
+
+
+def test_roofline_terms_dataclass():
+    t = A.RooflineTerms(
+        compute_s=1.0, memory_s=2.0, collective_s=0.5,
+        flops_per_dev=1, hbm_bytes_per_dev=1, coll_bytes_per_dev=1,
+        coll_by_op={},
+    )
+    assert t.dominant == "memory"
+    assert t.step_time_s == 2.0
+
+
+def test_model_flops_conventions():
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("qwen2.5-32b")
+    train = A.model_flops(cfg, SHAPES["train_4k"], active=30_000_000_000)
+    decode = A.model_flops(cfg, SHAPES["decode_32k"], active=30_000_000_000)
+    assert train == 6.0 * 30e9 * 256 * 4096
+    assert decode == 2.0 * 30e9 * 128  # one token per sequence
+
+
+def test_active_params_moe_discount():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import lm
+
+    cfg = get_config("llama4-scout-17b-a16e")
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    total, active = A.active_params(cfg, shapes)
+    assert total > 100e9
+    # top-1 of 16 experts + shared ⇒ far fewer active than total
+    assert active < 0.3 * total
