@@ -1,0 +1,113 @@
+"""Forward+backward attention timing: pure-JAX scan path vs the fused
+custom_vjp Pallas kernel path (flash and distr).
+
+CPU wall time is not TPU time — the kernel path runs in interpret mode here —
+so each row also carries the analytic fwd+bwd MXU-FLOP ratio from
+``ops.attention_cost``, the roofline-honest comparison (the quantity the
+37%-over-FA-2 claim rides on).  Emits ``BENCH_attention_bwd.json`` at the
+repo root so the perf trajectory is recorded per PR.
+
+  PYTHONPATH=src python -m benchmarks.run --only attention_bwd
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DistrConfig
+from repro.core.distr_attention import distr_attention as core_distr
+from repro.core.flash_reference import blockwise_flash_reference
+from repro.kernels import ops
+from repro.kernels.ops import attention_cost
+from benchmarks.common import save_result, timeit
+
+B, H = 1, 4
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_attention_bwd.json")
+
+
+def _fwd_bwd(attn_fn):
+    """value_and_grad of a scalar loss through the attention op."""
+
+    def loss(q, k, v):
+        return attn_fn(q, k, v).astype(jnp.float32).sum()
+
+    return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+
+
+def run() -> list[tuple]:
+    rows, records = [], []
+    block = 64
+    for d in (64,):
+        for n in (128, 256):
+            ks = jax.random.split(jax.random.PRNGKey(0), 3)
+            q = jax.random.normal(ks[0], (B, H, n, d), jnp.float32)
+            k = jax.random.normal(ks[1], (B, H, n, d), jnp.float32)
+            v = jax.random.normal(ks[2], (B, H, n, d), jnp.float32)
+
+            # --- exact: XLA blockwise reference vs Pallas kernel custom_vjp.
+            t_xla_flash = timeit(
+                _fwd_bwd(functools.partial(
+                    blockwise_flash_reference, block_q=block, block_k=block,
+                    causal=True,
+                )), q, k, v,
+            )
+            t_krn_flash = timeit(
+                _fwd_bwd(functools.partial(
+                    ops.flash_attention, causal=True, block_q=block,
+                    block_k=block,
+                )), q, k, v,
+            )
+            c_f = attention_cost(B, H, n, n, d, causal=True, block_q=block)
+            rec = dict(
+                kind="flash", d=d, n=n,
+                xla_fwd_bwd_us=t_xla_flash, kernel_fwd_bwd_us=t_krn_flash,
+                fwd_bwd_mxu_flops=c_f["fwd_bwd_mxu_flops"],
+            )
+            records.append(rec)
+            rows.append((
+                f"attn_bwd/flash/d={d}/n={n}", t_krn_flash,
+                f"xla_scan={t_xla_flash:.0f}us",
+            ))
+
+            # --- distr: checkpoint-scan core path vs kernel custom_vjp.
+            for g in (2, 4):
+                cfg = DistrConfig(group_size=g, block_q=block, block_k=block)
+                t_core = timeit(
+                    _fwd_bwd(functools.partial(core_distr, cfg=cfg, causal=True)),
+                    q, k, v,
+                )
+                t_krn = timeit(
+                    _fwd_bwd(functools.partial(
+                        ops.distr_attention, cfg=cfg, causal=True,
+                    )), q, k, v,
+                )
+                c_d = attention_cost(
+                    B, H, n, n, d, causal=True, group_size=g, block_q=block
+                )
+                ratio = c_d["fwd_bwd_mxu_flops"] / c_f["fwd_bwd_mxu_flops"]
+                rec = dict(
+                    kind="distr", d=d, n=n, g=g,
+                    scan_fwd_bwd_us=t_core, kernel_fwd_bwd_us=t_krn,
+                    fwd_bwd_mxu_flops=c_d["fwd_bwd_mxu_flops"],
+                    fwd_bwd_mxu_ratio_vs_flash=ratio,
+                )
+                records.append(rec)
+                rows.append((
+                    f"attn_bwd/distr/d={d}/n={n}/G={g}", t_krn,
+                    f"scan={t_core:.0f}us mxu_ratio={ratio:.3f}",
+                ))
+
+    save_result("attention_bwd", records)
+    with open(os.path.abspath(BENCH_PATH), "w") as f:
+        json.dump(records, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

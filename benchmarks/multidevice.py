@@ -21,6 +21,7 @@ sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import attend, AttentionConfig, DistrConfig
+from repro.utils.jax_compat import set_mesh
 from benchmarks.common import timeit
 
 B, H, N, D = 8, 8, 2048, 128
@@ -40,7 +41,7 @@ for ndev in (1, 2, 4, 8):
     mesh = jax.sharding.Mesh(jax.devices()[:ndev], ("data",))
     sh = NamedSharding(mesh, P("data"))
     qs, ks, vs = (jax.device_put(x, sh) for x in (q, k, v))
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         t_f = timeit(jax.jit(flash), qs, ks, vs, warmup=1, iters=3)
         t_d = timeit(jax.jit(distr), qs, ks, vs, warmup=1, iters=3)
     out.append(dict(devices=ndev, flash_us=t_f, distr_us=t_d,

@@ -2,6 +2,12 @@
 dry-run JSON records.
 
   PYTHONPATH=src python -m benchmarks.roofline_table [--mesh 16x16]
+
+``--attn`` instead renders the analytic attention fwd+bwd roofline (v5e)
+from ``kernels.ops.attention_cost`` — exact FA-2 vs DistrAttention per
+(d, N, G*), now that the cost model covers the backward kernels too.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table --attn
 """
 from __future__ import annotations
 
@@ -74,11 +80,45 @@ def table(mesh: str, tag: str = "") -> str:
     return "\n".join(lines)
 
 
+def attn_fwd_bwd_table() -> str:
+    """Analytic fwd+bwd attention roofline per (d, N, G*) on v5e numbers."""
+    from repro.kernels.ops import attention_cost
+    from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+    lines = [
+        "| d | N | G* | fwd MXU GF | bwd MXU GF | fwd+bwd vs exact "
+        "| compute µs | memory µs | dominant |",
+        "|---:|---:|---:|---:|---:|---:|---:|---:|---|",
+    ]
+    for d in (64, 128):
+        for n in (4096, 16384):
+            base = attention_cost(1, 8, n, n, d, causal=True)
+            for g in (1, 2, 4):
+                c = attention_cost(1, 8, n, n, d, causal=True, group_size=g)
+                fb_flops = c["fwd_bwd_mxu_flops"]
+                fb_bytes = c["fwd_bwd_hbm_bytes"]
+                comp_us = fb_flops / PEAK_FLOPS * 1e6
+                mem_us = fb_bytes / HBM_BW * 1e6
+                lines.append(
+                    f"| {d} | {n} | {g} | {c['mxu_flops']/1e9:.1f} | "
+                    f"{c['bwd_mxu_flops']/1e9:.1f} | "
+                    f"{fb_flops/base['fwd_bwd_mxu_flops']:.3f} | "
+                    f"{comp_us:.1f} | {mem_us:.1f} | "
+                    f"{'compute' if comp_us > mem_us else 'memory'} |"
+                )
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--attn", action="store_true",
+                    help="analytic attention fwd+bwd roofline instead")
     args = ap.parse_args()
+    if args.attn:
+        print(attn_fwd_bwd_table())
+        return
     print(table(args.mesh, args.tag))
 
 

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Results are also persisted as
 JSON under benchmarks/results/ for EXPERIMENTS.md.
 
   T1/Fig9  attention_time   — Flash2 vs DistrAttention compute time
+  §Bwd     attention_bwd    — fwd+bwd: scan path vs kernel custom_vjp path
   T2       blocksize        — (l, m) selection rule vs exhaustive best
   T3/T4    errors           — Ŝ error vs block size / sampling rate
   T5/T7/T8 compare          — ours vs Hydra/Flatten/Primal/Hyper fidelity+time
@@ -23,6 +24,7 @@ BENCHES = [
     "errors",
     "blocksize",
     "attention_time",
+    "attention_bwd",
     "compare",
     "llama_ttft",
     "lsh_grouping",

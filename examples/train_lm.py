@@ -37,7 +37,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--workdir", default="/tmp/repro_example_train")
-    ap.add_argument("--impl", default="distr", choices=("distr", "xla_flash"))
+    ap.add_argument(
+        "--impl", default="distr",
+        choices=("distr", "xla_flash", "pallas_distr", "pallas_flash"),
+        help="pallas_* trains through the fused custom_vjp kernel path "
+             "(compiled on TPU, interpret mode on CPU)",
+    )
     args = ap.parse_args()
 
     cfg = build_config(args.preset)

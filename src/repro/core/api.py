@@ -5,12 +5,17 @@
   reference    — naive exact softmax oracle
   xla_flash    — FA-2 blockwise exact, pure JAX (XLA path)
   distr        — DistrAttention, pure JAX (XLA path; dry-run default)
-  pallas_flash — Pallas TPU FA-2 kernel (interpret=True on CPU)
-  pallas_distr — Pallas TPU DistrAttention kernel (interpret=True on CPU)
+  pallas_flash — Pallas TPU FA-2 kernel (interpret auto-detected per backend)
+  pallas_distr — Pallas TPU DistrAttention kernel (interpret auto-detected)
 
 Models call :func:`attend` and never touch implementations directly, so a
 single config flag flips an architecture between exact and DistrAttention —
 the paper's "flexibility" knob (speed vs accuracy via group_size).
+
+The Pallas paths are differentiable (``kernels.ops`` wires ``custom_vjp``
+to the fused FA-2-style backward kernels), so training under
+``pallas_flash`` / ``pallas_distr`` runs the kernel path end-to-end instead
+of the ``jax.checkpoint``-scan XLA fallback (DESIGN.md §Backward).
 """
 from __future__ import annotations
 
@@ -32,7 +37,9 @@ class AttentionConfig:
     # DistrConfig so the paper's (l, m) study has one home).
     block_q: int = 128
     block_k: int = 128
-    interpret: bool = True  # Pallas interpret mode (CPU container); False on TPU.
+    # Pallas interpret mode: None = auto (compiled on TPU, interpreter on
+    # the CPU container); set explicitly only to force one mode.
+    interpret: bool | None = None
     # Beyond-paper: serve-side fused-K̂ decode cache under a static
     # permutation (see serve.kv_cache); cuts K-cache read bytes by 1/G*.
     distr_decode: bool = False
@@ -72,6 +79,9 @@ def attend(
             q, k, v, cfg.distr, causal=causal, scale=scale, kv_mask=kv_mask
         )
     if cfg.impl == "pallas_flash":
+        if kv_mask is not None:
+            # Kernels have no kv_mask plumbing; the oracle handles it.
+            return reference_attention(q, k, v, causal=causal, scale=scale, kv_mask=kv_mask)
         from repro.kernels import ops  # deferred: kernels are optional at import
 
         return ops.flash_attention(
@@ -79,6 +89,8 @@ def attend(
             block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret,
         )
     if cfg.impl == "pallas_distr":
+        if kv_mask is not None:
+            return reference_attention(q, k, v, causal=causal, scale=scale, kv_mask=kv_mask)
         from repro.kernels import ops
 
         return ops.distr_attention(

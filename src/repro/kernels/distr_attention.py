@@ -27,6 +27,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.flash_attention import NEG_INF, STATS_LANES
+from repro.kernels.tpu_compat import CompilerParams
+
+
+def fuse_k_columns(k, perm, group_size: int):
+    """The paper's fusion: permute K's columns by ``perm``, segment-sum runs
+    of ``G*``.  Shared by the forward and backward kernels — the backward's
+    recomputed K̂ must be bit-identical to what produced the saved LSE."""
+    k_perm = jnp.take(k, perm, axis=1)  # lane gather (VPU)
+    d = k.shape[1]
+    return k_perm.reshape(k.shape[0], d // group_size, group_size).sum(axis=2)
 
 
 def _distr_kernel(
@@ -35,16 +45,18 @@ def _distr_kernel(
     v_ref,
     perm_ref,
     o_ref,
-    m_scr,
-    l_scr,
-    acc_scr,
-    *,
+    *rest,
     causal: bool,
     group_size: int,
     block_q: int,
     block_k: int,
     kv_len: int,
+    with_lse: bool,
 ):
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        m_scr, l_scr, acc_scr = rest
     iq = pl.program_id(1)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -67,9 +79,7 @@ def _distr_kernel(
         perm = perm_ref[0]  # (d,) int32 — this Q block's permutation
 
         # --- the paper's fusion: permute K columns, sum each run of G*.
-        k_perm = jnp.take(k, perm, axis=1)  # lane gather (VPU)
-        d = k.shape[1]
-        k_hat = k_perm.reshape(block_k, d // group_size, group_size).sum(axis=2)
+        k_hat = fuse_k_columns(k, perm, group_size)
 
         s = jax.lax.dot_general(
             q_hat, k_hat, (((1,), (1,)), ((), ())),
@@ -101,6 +111,10 @@ def _distr_kernel(
         l_final = l_scr[...][:, :1]
         denom = jnp.where(l_final == 0.0, 1.0, l_final)
         o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        if with_lse:
+            m_final = m_scr[...][:, :1]
+            lse = jnp.where(l_final == 0.0, NEG_INF, m_final + jnp.log(denom))
+            lse_ref[...] = jnp.broadcast_to(lse, lse_ref.shape)
 
 
 def distr_attention_kernel_call(
@@ -116,12 +130,16 @@ def distr_attention_kernel_call(
     block_k: int,
     kv_len: int,
     interpret: bool = True,
-) -> jnp.ndarray:
+    return_residuals: bool = False,
+):
     """Raw pallas_call.
 
     q_hat: (BHq, N, d/G*) pre-sampled & pre-scaled queries (padded N).
     k, v:  (BHkv, Nk, d) (padded Nk).
     perm:  (BHq, N/block_q, d) int32 per-Q-block permutations.
+
+    Returns ``o`` or ``(o, lse)`` (lane-replicated row logsumexp, f32) when
+    ``return_residuals`` — the residual consumed by kernels/backward.py.
     """
     bhq, n, dg = q_hat.shape
     bhkv, nk_len, d = k.shape
@@ -137,7 +155,19 @@ def distr_attention_kernel_call(
         block_q=block_q,
         block_k=block_k,
         kv_len=kv_len,
+        with_lse=return_residuals,
     )
+    out_specs = pl.BlockSpec((None, block_q, d), lambda bh, i, j: (bh, i, 0))
+    out_shape = jax.ShapeDtypeStruct((bhq, n, d), q_hat.dtype)
+    if return_residuals:
+        out_specs = [
+            out_specs,
+            pl.BlockSpec((None, block_q, STATS_LANES), lambda bh, i, j: (bh, i, 0)),
+        ]
+        out_shape = [
+            out_shape,
+            jax.ShapeDtypeStruct((bhq, n, STATS_LANES), jnp.float32),
+        ]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -147,14 +177,14 @@ def distr_attention_kernel_call(
             pl.BlockSpec((None, block_k, d), lambda bh, i, j: (bh // q_per_kv, j, 0)),
             pl.BlockSpec((None, 1, d), lambda bh, i, j: (bh, i, 0)),
         ],
-        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, i, j: (bh, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bhq, n, d), q_hat.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
             pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

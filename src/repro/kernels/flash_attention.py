@@ -6,8 +6,14 @@ KV-block iteration is the innermost ("arbitrary") grid dimension so the
 ``(m, l, acc)`` scratch persists across it — the Pallas equivalent of FA-2's
 inner loop held in registers/SMEM.
 
+With ``return_residuals=True`` the kernel additionally emits the per-row
+logsumexp ``L = m + log l`` (lane-replicated f32, DESIGN.md §Backward) —
+the only softmax statistic the FA-2 backward needs; dQ/dK/dV then recompute
+the score blocks instead of materialising them (kernels/backward.py).
+
 Validated against ``ref.flash_attention_ref`` under ``interpret=True`` (this
-container is CPU-only); on real TPUs drop ``interpret``.
+container is CPU-only); on real TPUs the ops.py wrapper auto-selects
+compiled mode.
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tpu_compat import CompilerParams
 
 NEG_INF = -1e30
 # Softmax stats are stored lane-replicated: TPU vector layouts want the minor
@@ -29,16 +37,18 @@ def _flash_kernel(
     k_ref,
     v_ref,
     o_ref,
-    m_scr,
-    l_scr,
-    acc_scr,
-    *,
+    *rest,
     scale: float,
     causal: bool,
     block_q: int,
     block_k: int,
     kv_len: int,
+    with_lse: bool,
 ):
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        m_scr, l_scr, acc_scr = rest
     iq = pl.program_id(1)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -91,6 +101,12 @@ def _flash_kernel(
         # Fully-masked rows (query padding) have l == 0; emit zeros.
         denom = jnp.where(l_final == 0.0, 1.0, l_final)
         o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        if with_lse:
+            m_final = m_scr[...][:, :1]
+            lse = jnp.where(
+                l_final == 0.0, NEG_INF, m_final + jnp.log(denom)
+            )
+            lse_ref[...] = jnp.broadcast_to(lse, lse_ref.shape)
 
 
 def flash_attention_kernel_call(
@@ -105,11 +121,15 @@ def flash_attention_kernel_call(
     block_k: int,
     kv_len: int,
     interpret: bool = True,
-) -> jnp.ndarray:
+    return_residuals: bool = False,
+):
     """Raw pallas_call.  q: (BHq, N, d); k, v: (BHkv, Nk, d); N, Nk padded.
 
     The KV head for flattened q index ``bh`` is resolved inside the BlockSpec
     index maps (GQA without materialising repeated K/V).
+
+    Returns ``o`` or ``(o, lse)`` with ``lse: (BHq, N, STATS_LANES)`` f32
+    (lane-replicated row logsumexp) when ``return_residuals``.
     """
     bhq, n, d = q.shape
     bhkv, nk_len, _ = k.shape
@@ -133,7 +153,19 @@ def flash_attention_kernel_call(
         block_q=block_q,
         block_k=block_k,
         kv_len=kv_len,
+        with_lse=return_residuals,
     )
+    out_specs = pl.BlockSpec((None, block_q, d), q_index)
+    out_shape = jax.ShapeDtypeStruct((bhq, n, d), q.dtype)
+    if return_residuals:
+        out_specs = [
+            out_specs,
+            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
+        ]
+        out_shape = [
+            out_shape,
+            jax.ShapeDtypeStruct((bhq, n, STATS_LANES), jnp.float32),
+        ]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -142,14 +174,14 @@ def flash_attention_kernel_call(
             pl.BlockSpec((None, block_k, d), kv_index),
             pl.BlockSpec((None, block_k, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((None, block_q, d), q_index),
-        out_shape=jax.ShapeDtypeStruct((bhq, n, d), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
             pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

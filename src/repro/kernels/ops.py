@@ -3,6 +3,19 @@
 Handles everything the raw kernels keep out of their grids: GQA flattening,
 sequence padding, LSH permutation precompute, scale folding, and the
 analytic cost models used by benchmarks and the §Perf roofline corrections.
+
+Both attention entry points are differentiable end-to-end via
+``jax.custom_vjp``: the forward kernels emit the logsumexp row statistics,
+and the backward runs the fused FA-2-style kernels in
+``repro.kernels.backward`` (dQ, dK/dV, and the D = rowsum(dO ∘ O)
+precompute) instead of XLA rematerialisation — so training steps stay on
+the kernel path (DESIGN.md §Backward).  The DistrAttention backward treats
+the LSH permutation as non-differentiable (straight-through): gradients
+flow through the Q-sampling gather and the K̂ segment-sum only.
+
+``interpret=None`` (the default everywhere) auto-detects the backend:
+compiled kernels on TPU, interpreter mode elsewhere — no call-site changes
+between the CPU container and real hardware.
 """
 from __future__ import annotations
 
@@ -13,9 +26,15 @@ import jax.numpy as jnp
 
 from repro.core import grouping, lsh
 from repro.core.distr_attention import DistrConfig, compute_block_permutations
+from repro.kernels import backward as bwd
 from repro.kernels.distr_attention import distr_attention_kernel_call
 from repro.kernels.flash_attention import flash_attention_kernel_call
 from repro.kernels.ssd import ssd_kernel_call
+
+
+def _default_interpret() -> bool:
+    """Compiled Pallas on TPU, interpreter everywhere else (CPU container)."""
+    return jax.default_backend() != "tpu"
 
 
 def _pad_seq(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
@@ -26,9 +45,105 @@ def _pad_seq(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
     return x, n
 
 
+def _flatten_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, n, d = x.shape
+    return x.reshape(b * h, n, d)
+
+
+def _gqa_sum(dx_per_q_head: jnp.ndarray, b: int, hkv: int, q_per_kv: int,
+             nk_orig: int) -> jnp.ndarray:
+    """(B·Hq, Nk_pad, d) per-query-head grads → (B, Hkv, Nk, d)."""
+    bhq, nk_pad, d = dx_per_q_head.shape
+    out = dx_per_q_head.reshape(b, hkv, q_per_kv, nk_pad, d).sum(axis=2)
+    return out[:, :, :nk_orig, :]
+
+
+# ---------------------------------------------------------------------------
+# Exact FA-2 with custom_vjp
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_impl(causal, scale, block_q, block_k, interpret, q, k, v,
+                    with_residuals):
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    q_per_kv = hq // hkv
+
+    qp, n_orig = _pad_seq(q, block_q)
+    kp, kv_len = _pad_seq(k, block_k)
+    vp, _ = _pad_seq(v, block_k)
+
+    res = flash_attention_kernel_call(
+        _flatten_heads(qp), _flatten_heads(kp), _flatten_heads(vp),
+        q_per_kv=q_per_kv, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, kv_len=kv_len,
+        interpret=interpret, return_residuals=with_residuals,
+    )
+    out, lse = res if with_residuals else (res, None)
+    return out.reshape(b, hq, -1, d)[:, :, :n_orig, :], lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _flash_attention(causal, scale, block_q, block_k, interpret, q, k, v):
+    # Primal (inference / non-differentiated) path: skip the LSE residual —
+    # it is only consumed by the backward kernels.
+    out, _ = _flash_fwd_impl(
+        causal, scale, block_q, block_k, interpret, q, k, v,
+        with_residuals=False,
+    )
+    return out
+
+
+def _flash_vjp_fwd(causal, scale, block_q, block_k, interpret, q, k, v):
+    out, lse = _flash_fwd_impl(
+        causal, scale, block_q, block_k, interpret, q, k, v,
+        with_residuals=True,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, scale, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    q_per_kv = hq // hkv
+
+    qp, n_orig = _pad_seq(q, block_q)
+    kp, kv_len = _pad_seq(k, block_k)
+    vp, _ = _pad_seq(v, block_k)
+    dop, _ = _pad_seq(do.astype(q.dtype), block_q)
+    op, _ = _pad_seq(o, block_q)
+
+    qf, kf, vf = _flatten_heads(qp), _flatten_heads(kp), _flatten_heads(vp)
+    dof, of = _flatten_heads(dop), _flatten_heads(op)
+
+    delta = bwd.delta_kernel_call(of, dof, block_q=block_q, interpret=interpret)
+    dq = bwd.flash_dq_kernel_call(
+        qf, kf, vf, dof, lse, delta,
+        q_per_kv=q_per_kv, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, kv_len=kv_len, interpret=interpret,
+    )
+    dk_h, dv_h = bwd.flash_dkv_kernel_call(
+        qf, kf, vf, dof, lse, delta,
+        q_per_kv=q_per_kv, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, kv_len=kv_len, interpret=interpret,
+    )
+    dq = dq.reshape(b, hq, -1, d)[:, :, :n_orig, :].astype(q.dtype)
+    dk = _gqa_sum(dk_h, b, hkv, q_per_kv, kv_len).astype(k.dtype)
+    dv = _gqa_sum(dv_h, b, hkv, q_per_kv, kv_len).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret")
 )
+def _flash_attention_jit(q, k, v, causal, scale, block_q, block_k, interpret):
+    return _flash_attention(causal, scale, block_q, block_k, interpret, q, k, v)
+
+
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -38,72 +153,50 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Exact FA-2 Pallas kernel.  q: (B,Hq,N,d); k,v: (B,Hkv,Nk,d)."""
+    """Exact FA-2 Pallas kernel, differentiable.  q: (B,Hq,N,d); k,v:
+    (B,Hkv,Nk,d).  ``interpret=None`` auto-detects the backend."""
+    scale = float(scale) if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash_attention_jit(q, k, v, causal, scale, block_q, block_k, interpret)
+
+
+# ---------------------------------------------------------------------------
+# DistrAttention with custom_vjp
+# ---------------------------------------------------------------------------
+
+
+def _distr_fwd_impl(cfg, causal, scale, interpret, q, k, v, with_residuals):
+    """Returns (out, lse, q_hat_flat, perms) — the kernel-path residuals
+    (lse is None on the primal path, which skips emitting it)."""
     b, hq, n, d = q.shape
-    hkv, nk = k.shape[1], k.shape[2]
-    scale = scale if scale is not None else 1.0 / (d**0.5)
-    q_per_kv = hq // hkv
-
-    q, n_orig = _pad_seq(q, block_q)
-    k, kv_len = _pad_seq(k, block_k)
-    v, _ = _pad_seq(v, block_k)
-
-    out = flash_attention_kernel_call(
-        q.reshape(b * hq, q.shape[2], d),
-        k.reshape(b * hkv, k.shape[2], d),
-        v.reshape(b * hkv, v.shape[2], d),
-        q_per_kv=q_per_kv,
-        scale=scale,
-        causal=causal,
-        block_q=block_q,
-        block_k=block_k,
-        kv_len=kv_len,
-        interpret=interpret,
-    )
-    return out.reshape(b, hq, -1, d)[:, :, :n_orig, :]
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "causal", "scale", "interpret"))
-def distr_attention(
-    q: jnp.ndarray,
-    k: jnp.ndarray,
-    v: jnp.ndarray,
-    cfg: DistrConfig = DistrConfig(),
-    *,
-    causal: bool = False,
-    scale: float | None = None,
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """DistrAttention Pallas kernel (paper §3.3 + FA-2 integration).
-
-    Stage 1 (outside kernel, XLA): LSH permutations per Q block + Q sampling.
-    Stage 2 (kernel): per-KV-block fusion + reduced-d flash attention.
-    """
-    b, hq, n, d = q.shape
-    hkv, nk = k.shape[1], k.shape[2]
-    scale = scale if scale is not None else 1.0 / (d**0.5)
+    hkv = k.shape[1]
     q_per_kv = hq // hkv
     g = cfg.group_size
 
-    q, n_orig = _pad_seq(q, cfg.block_q)
-    k, kv_len = _pad_seq(k, cfg.block_k)
-    v, _ = _pad_seq(v, cfg.block_k)
-    n_pad = q.shape[2]
+    qp, n_orig = _pad_seq(q, cfg.block_q)
+    kp, kv_len = _pad_seq(k, cfg.block_k)
+    vp, _ = _pad_seq(v, cfg.block_k)
+    n_pad = qp.shape[2]
     nq_blocks = n_pad // cfg.block_q
 
+    # Stage 1 (outside kernel, XLA): LSH permutations per Q block + sampling.
     proj = lsh.make_projection(jax.random.PRNGKey(cfg.proj_seed), cfg.block_q)
     if cfg.shared_kv_perm:
-        q_mean = q.reshape(b, hkv, q_per_kv, n_pad, d).mean(axis=2)
+        q_mean = qp.reshape(b, hkv, q_per_kv, n_pad, d).mean(axis=2)
         perms = compute_block_permutations(q_mean, cfg, proj)  # (b, hkv, nq, d)
         perms = jnp.broadcast_to(
             perms[:, :, None], (b, hkv, q_per_kv, nq_blocks, d)
         ).reshape(b, hq, nq_blocks, d)
     else:
-        perms = compute_block_permutations(q, cfg, proj)  # (b, hq, nq, d)
+        perms = compute_block_permutations(qp, cfg, proj)  # (b, hq, nq, d)
+    # Straight-through: the permutation is a fixed discrete grouping choice;
+    # no gradient flows into the hash (paper's fixed-grouping semantics).
+    perms = jax.lax.stop_gradient(perms)
 
-    q_blocks = q.reshape(b, hq, nq_blocks, cfg.block_q, d)
+    q_blocks = qp.reshape(b, hq, nq_blocks, cfg.block_q, d)
     if cfg.estimator == "sample":
         q_hat = grouping.sample_columns(q_blocks, perms, g)
     elif cfg.estimator == "mean":
@@ -112,33 +205,124 @@ def distr_attention(
         raise ValueError(f"unknown estimator {cfg.estimator!r}")
     q_hat = (q_hat * scale).reshape(b * hq, n_pad, d // g).astype(q.dtype)
 
-    out = distr_attention_kernel_call(
+    res = distr_attention_kernel_call(
         q_hat,
-        k.reshape(b * hkv, k.shape[2], d),
-        v.reshape(b * hkv, v.shape[2], d),
+        _flatten_heads(kp),
+        _flatten_heads(vp),
         perms.reshape(b * hq, nq_blocks, d),
-        q_per_kv=q_per_kv,
-        causal=causal,
-        group_size=g,
-        block_q=cfg.block_q,
-        block_k=cfg.block_k,
-        kv_len=kv_len,
+        q_per_kv=q_per_kv, causal=causal, group_size=g,
+        block_q=cfg.block_q, block_k=cfg.block_k, kv_len=kv_len,
+        interpret=interpret, return_residuals=with_residuals,
+    )
+    out, lse = res if with_residuals else (res, None)
+    return out.reshape(b, hq, -1, d)[:, :, :n_orig, :], lse, q_hat, perms
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _distr_attention(cfg, causal, scale, interpret, q, k, v):
+    out, _, _, _ = _distr_fwd_impl(
+        cfg, causal, scale, interpret, q, k, v, with_residuals=False
+    )
+    return out
+
+
+def _distr_vjp_fwd(cfg, causal, scale, interpret, q, k, v):
+    out, lse, q_hat, perms = _distr_fwd_impl(
+        cfg, causal, scale, interpret, q, k, v, with_residuals=True
+    )
+    return out, (q, k, v, out, lse, q_hat, perms)
+
+
+def _distr_vjp_bwd(cfg, causal, scale, interpret, res, do):
+    q, k, v, o, lse, q_hat, perms = res
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    q_per_kv = hq // hkv
+    g = cfg.group_size
+    dg = d // g
+
+    kp, kv_len = _pad_seq(k, cfg.block_k)
+    vp, _ = _pad_seq(v, cfg.block_k)
+    dop, n_orig = _pad_seq(do.astype(q.dtype), cfg.block_q)
+    op, _ = _pad_seq(o, cfg.block_q)
+    n_pad = dop.shape[2]
+    nq_blocks = n_pad // cfg.block_q
+
+    kf, vf = _flatten_heads(kp), _flatten_heads(vp)
+    dof, of = _flatten_heads(dop), _flatten_heads(op)
+    perm_f = perms.reshape(b * hq, nq_blocks, d)
+    # A permutation's inverse is its argsort; the dkv kernel turns the
+    # segment-sum transpose (scatter-add over perm) into a gather by it.
+    inv_perm_f = jnp.argsort(perm_f, axis=-1).astype(perm_f.dtype)
+
+    delta = bwd.delta_kernel_call(of, dof, block_q=cfg.block_q, interpret=interpret)
+    dq_hat = bwd.distr_dq_kernel_call(
+        q_hat, kf, vf, perm_f, dof, lse, delta,
+        q_per_kv=q_per_kv, causal=causal, group_size=g,
+        block_q=cfg.block_q, block_k=cfg.block_k, kv_len=kv_len,
         interpret=interpret,
     )
-    return out.reshape(b, hq, -1, d)[:, :, :n_orig, :]
+    dk_h, dv_h = bwd.distr_dkv_kernel_call(
+        q_hat, kf, vf, perm_f, inv_perm_f, dof, lse, delta,
+        q_per_kv=q_per_kv, causal=causal, group_size=g,
+        block_q=cfg.block_q, block_k=cfg.block_k, kv_len=kv_len,
+        interpret=interpret,
+    )
+
+    # dQ̂ → dQ: transpose of the sampling/mean gather (scatter into the
+    # sampled columns), with the forward's 1/sqrt(d) pre-scale folded in.
+    sample_fn = (
+        grouping.sample_columns if cfg.estimator == "sample"
+        else grouping.mean_columns
+    )
+    dq_hat_blocks = dq_hat.reshape(b, hq, nq_blocks, cfg.block_q, dg) * scale
+    (dq_blocks,) = jax.linear_transpose(
+        lambda t: sample_fn(t, perms, g),
+        jax.ShapeDtypeStruct((b, hq, nq_blocks, cfg.block_q, d), jnp.float32),
+    )(dq_hat_blocks)
+    dq = dq_blocks.reshape(b, hq, n_pad, d)[:, :, :n_orig, :].astype(q.dtype)
+    dk = _gqa_sum(dk_h, b, hkv, q_per_kv, kv_len).astype(k.dtype)
+    dv = _gqa_sum(dv_h, b, hkv, q_per_kv, kv_len).astype(v.dtype)
+    return dq, dk, dv
+
+
+_distr_attention.defvjp(_distr_vjp_fwd, _distr_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "causal", "scale", "interpret"))
+def _distr_attention_jit(q, k, v, cfg, causal, scale, interpret):
+    return _distr_attention(cfg, causal, scale, interpret, q, k, v)
+
+
+def distr_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: DistrConfig = DistrConfig(),
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """DistrAttention Pallas kernel (paper §3.3 + FA-2 integration),
+    differentiable under straight-through permutations.
+
+    Stage 1 (outside kernel, XLA): LSH permutations per Q block + Q sampling.
+    Stage 2 (kernel): per-KV-block fusion + reduced-d flash attention.
+    """
+    scale = float(scale) if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _distr_attention_jit(q, k, v, cfg, causal, scale, interpret)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(
-    x: jnp.ndarray,
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    c: jnp.ndarray,
-    *,
-    chunk: int = 64,
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """Mamba-2 SSD.  x: (B,N,H,P); a: (B,N,H); b,c: (B,N,G,S)."""
+def _ssd_jit(x, a, b, c, chunk, interpret):
     bsz, n, h, p = x.shape
     g, s = b.shape[2], b.shape[3]
     heads_per_group = h // g
@@ -163,6 +347,21 @@ def ssd(
     return y[:, :n, :, :]
 
 
+def ssd(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Mamba-2 SSD.  x: (B,N,H,P); a: (B,N,H); b,c: (B,N,G,S)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd_jit(x, a, b, c, chunk, interpret)
+
+
 # ---------------------------------------------------------------------------
 # Analytic cost models (benchmarks + roofline corrections).
 # ---------------------------------------------------------------------------
@@ -179,15 +378,22 @@ def attention_cost(
     group_size: int = 1,
     block_q: int = 128,
 ) -> dict:
-    """FLOPs / bytes model of (Distr)FlashAttention for one forward pass.
+    """FLOPs / bytes model of (Distr)FlashAttention, forward AND backward.
 
-    MXU matmul FLOPs, VPU fusion adds, and HBM bytes (bf16 in/out, the
-    flash structure never materialises S/P).  ``group_size=1`` = exact FA-2.
+    Forward keys model one fused forward pass: MXU matmul FLOPs, VPU fusion
+    adds, and HBM bytes (bf16 in/out, the flash structure never materialises
+    S/P).  ``bwd_*`` keys model the kernels/backward.py pass: the dQ kernel
+    recomputes S and runs dP, dQ; the dK/dV kernel recomputes S and runs dP,
+    dV, dK; plus the D = rowsum(dO ∘ O) precompute.  Score-space matmuls
+    (S, dQ, dK) contract over d/G*; context-space ones (dP, dV) over the
+    full d.  ``group_size=1`` = exact FA-2.
     """
     frac = 0.5 * (1 + 1 / max(nk // max(block_q, 1), 1)) if causal else 1.0
     d_eff = d // group_size
-    qk_flops = 2 * b * hq * n * nk * d_eff * frac
-    pv_flops = 2 * b * hq * n * nk * d * frac
+    score_mm = 2 * b * hq * n * nk * d_eff * frac  # one reduced-d matmul
+    full_mm = 2 * b * hq * n * nk * d * frac  # one full-d matmul
+    qk_flops = score_mm
+    pv_flops = full_mm
     softmax_flops = 4 * b * hq * n * nk * frac  # exp, max, sum, scale
     # K fusion: for each (q-block, kv element) a d-length permuted add chain.
     fusion_adds = (
@@ -200,11 +406,35 @@ def attention_cost(
     )
     w = 2  # bf16
     io_bytes = w * (
-        b * hq * n * (d + d // group_size if group_size > 1 else d)  # Q (+Q̂)
-        + b * hq * (n // max(block_q, 1)) * nk * 0  # K̂ stays in VMEM
+        b * hq * n * ((d + d // group_size) if group_size > 1 else d)  # Q (+Q̂)
+        # K̂ is (re)built inside the kernel and never leaves VMEM: 0 bytes.
         + 2 * b * hq * nk * d  # K, V read (per-head upper bound)
         + b * hq * n * d  # O write
     )
+
+    # ---- backward (kernels/backward.py structure) ----------------------
+    # dq kernel: S recompute (d_eff) + dP (d) + dQ (d_eff)
+    # dkv kernel: S recompute (d_eff) + dP (d) + dV (d) + dK (d_eff)
+    bwd_mxu_flops = 4 * score_mm + 3 * full_mm
+    # P from saved LSE (exp) twice + dS = P∘(dP−D) twice + D precompute.
+    bwd_vpu_flops = 6 * b * hq * n * nk * frac + 2 * b * hq * n * d
+    # K̂ re-fused in both backward kernels; dK̂ replication adds back to d.
+    bwd_fusion_adds = 3 * fusion_adds
+    bwd_io_bytes = w * (
+        2 * b * hq * n * ((d + d // group_size) if group_size > 1 else d)  # Q(+Q̂) ×2 kernels
+        + 4 * b * hq * nk * d  # K, V read in both kernels
+        + 4 * b * hq * n * d  # dO read ×2 kernels + O + dO reads (delta)
+    ) + 4 * (
+        # LSE + D modeled as per-row f32 scalars: one write each (fwd kernel /
+        # delta kernel) + one read each in both backward kernels = 6n.  The
+        # current implementation lane-replicates them ×STATS_LANES in HBM
+        # (DESIGN.md §Backward) — a known constant-factor overhead the model
+        # deliberately idealises away.
+        6 * b * hq * n
+        + b * hq * n * d  # dQ write, f32
+        + 2 * b * hq * nk * d  # per-q-head dK, dV writes, f32
+    )
+
     return {
         "qk_flops": qk_flops,
         "pv_flops": pv_flops,
@@ -214,6 +444,11 @@ def attention_cost(
         "mxu_flops": qk_flops + pv_flops,
         "total_flops": qk_flops + pv_flops + softmax_flops + fusion_adds + lsh_flops,
         "hbm_bytes": io_bytes,
+        "bwd_mxu_flops": bwd_mxu_flops,
+        "bwd_total_flops": bwd_mxu_flops + bwd_vpu_flops + bwd_fusion_adds,
+        "bwd_hbm_bytes": bwd_io_bytes,
+        "fwd_bwd_mxu_flops": qk_flops + pv_flops + bwd_mxu_flops,
+        "fwd_bwd_hbm_bytes": io_bytes + bwd_io_bytes,
     }
 
 

@@ -1,0 +1,11 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` around
+0.5; the container pins an older jax.  Every kernel imports the name from
+here so the repo runs on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

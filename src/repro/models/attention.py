@@ -304,6 +304,9 @@ def mla_apply(
     v = constrain(v, "data", "model", None, None)
 
     if attn_cfg.impl in ("distr", "pallas_distr"):
+        # The q_exact/k_exact (RoPE) side-channel only exists on the pure-JAX
+        # path, so MLA keeps it for pallas_distr too; GQA/MHA attention is
+        # where the kernel custom_vjp path engages (see core.api.attend).
         k_rope_bc = jnp.broadcast_to(k_rope, (b, h, n, rope_d))
         o = distr_attention(
             q_nope, k_nope, v, attn_cfg.distr,

@@ -24,7 +24,9 @@ def constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
     axis of the multi-pod mesh.
     """
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.utils.jax_compat import get_abstract_mesh
+
+        mesh = get_abstract_mesh()
         if mesh is None or mesh.empty or not mesh.axis_names:
             return x
         dp = tuple(a for a in mesh.axis_names if a != "model")

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers
+from repro.utils.jax_compat import axis_size, get_abstract_mesh, shard_map
 
 
 def moe_init(key, cfg, dtype=jnp.float32):
@@ -132,7 +133,7 @@ def _moe_ep_a2a(params, x: jnp.ndarray, cfg, mesh):
 
     def local_moe(xl, router_w, gate_w, up_w, down_w):
         # xl: (b_loc, s_loc, D); gate/up/down: (E_loc, ·, ·) local experts.
-        ep = jax.lax.axis_size(axis)
+        ep = axis_size(axis, mesh)
         bl, sl, d = xl.shape
         t = bl * sl
         xf = xl.reshape(t, d)
@@ -209,7 +210,7 @@ def _moe_ep_a2a(params, x: jnp.ndarray, cfg, mesh):
             aux = jax.lax.pmean(aux, a)
         return y_tok.reshape(bl, sl, d).astype(xl.dtype), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(pspec_x, r_spec, e_spec, e_spec, e_spec),
@@ -238,7 +239,7 @@ def _moe_ep_psum(params, x: jnp.ndarray, cfg, mesh):
     pspec_scalar = jax.sharding.PartitionSpec()
 
     def local_moe(xl, router_w, gate_w, up_w, down_w):
-        ep = jax.lax.axis_size(axis)
+        ep = axis_size(axis, mesh)
         bl, sl, d = xl.shape
         t = bl * sl
         xf = xl.reshape(t, d)
@@ -262,7 +263,7 @@ def _moe_ep_psum(params, x: jnp.ndarray, cfg, mesh):
             aux = jax.lax.pmean(aux, a)
         return y.reshape(bl, sl, d).astype(xl.dtype), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(pspec_x, r_spec, e_spec, e_spec, e_spec),
@@ -284,7 +285,7 @@ def _moe_ep_psum(params, x: jnp.ndarray, cfg, mesh):
 
 def _active_mesh():
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
         if mesh is None or mesh.empty or "model" not in mesh.axis_names:
             return None
         return mesh

@@ -78,6 +78,25 @@ def _parse_shapes(s: str) -> int:
     return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(s))
 
 
+def _split_args(s: str) -> list[str]:
+    """Split an HLO operand list on top-level commas only — operand types
+    like ``f32[128,128]{1,0}`` carry commas inside brackets/braces."""
+    args, buf, depth = [], "", 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            args.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    if buf.strip():
+        args.append(buf)
+    return [a.strip() for a in args if a.strip()]
+
+
 class _Comp:
     __slots__ = ("flops", "bytes", "coll", "calls", "dus_root_bytes", "root_op")
 
@@ -125,7 +144,7 @@ def _analyze_computation(lines: list[str]) -> _Comp:
         out_bytes = _parse_shapes(shape_str)
         if line.startswith("ROOT"):
             c.root_op = op
-        # operand names: tokens after the op's '(' up to the matching ')'
+        # operand list: text after the op's '(' up to the matching ')'
         tail = line[m.end():]
         depth = 1
         arglist = []
@@ -140,12 +159,19 @@ def _analyze_computation(lines: list[str]) -> _Comp:
                     break
             if depth >= 1:
                 buf += ch
-        args = [a.strip().lstrip("%") for a in (arglist[0].split(",") if arglist else [])]
-        args = [a for a in args if a]
+        # Operands may be bare names (`%x`) or typed (`f32[8,8]{1,0} %x`)
+        # depending on the XLA version; resolve each to (name, shape_str).
+        raw_args = _split_args(arglist[0]) if arglist else []
+        args = []
+        arg_shapes = []
+        for a in raw_args:
+            name = a.split()[-1].lstrip("%")
+            args.append(name)
+            arg_shapes.append(a if _SHAPE_RE.search(a) else shapes.get(name, ""))
 
         base_op = op[:-6] if op.endswith("-start") else op
         if base_op in COLLECTIVE_OPS and not op.endswith("-done"):
-            opnd = sum(_parse_shapes(shapes.get(a, "")) for a in args)
+            opnd = sum(_parse_shapes(a) for a in arg_shapes)
             c.coll[base_op] += opnd if opnd else out_bytes
             c.bytes += out_bytes
             continue
@@ -158,7 +184,7 @@ def _analyze_computation(lines: list[str]) -> _Comp:
             ) if _SHAPE_RE.search(shape_str) else 0
             contract = 1
             mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-            lhs_shape = shapes.get(args[0], "") if args else ""
+            lhs_shape = arg_shapes[0] if arg_shapes else ""
             lhs_dims = _SHAPE_RE.search(lhs_shape)
             if mdims and lhs_dims and lhs_dims.group(2):
                 dims = [int(x) for x in lhs_dims.group(2).split(",")]
@@ -166,9 +192,7 @@ def _analyze_computation(lines: list[str]) -> _Comp:
                     if di != "":
                         contract *= dims[int(di)]
             c.flops += 2.0 * out_elems * contract
-            c.bytes += out_bytes + sum(
-                _parse_shapes(shapes.get(a, "")) for a in args
-            )
+            c.bytes += out_bytes + sum(_parse_shapes(a) for a in arg_shapes)
             continue
 
         if op == "fusion":
@@ -214,7 +238,7 @@ def _analyze_computation(lines: list[str]) -> _Comp:
             # In-place aliased by XLA: traffic = the update slice, not the
             # full buffer (which would overcount scan stacking by ×trips).
             upd = (
-                2 * _parse_shapes(shapes.get(args[1], "")) if len(args) >= 2 else 0
+                2 * _parse_shapes(arg_shapes[1]) if len(arg_shapes) >= 2 else 0
             )
             c.bytes += upd
             if line.startswith("ROOT"):
@@ -227,7 +251,7 @@ def _analyze_computation(lines: list[str]) -> _Comp:
             # In-place on TPU (operand aliased to output): traffic = the
             # touched rows (read-modify-write of updates), not the buffer —
             # KV-cache inserts would otherwise count the full cache/layer.
-            upd = _parse_shapes(shapes.get(args[-1], "")) if args else 0
+            upd = _parse_shapes(arg_shapes[-1]) if arg_shapes else 0
             c.bytes += 3 * (upd or out_bytes // 16)
             continue
         if op == "gather":
@@ -235,9 +259,7 @@ def _analyze_computation(lines: list[str]) -> _Comp:
             continue
         if op in ("sort", "reduce", "reduce-window", "select-and-scatter",
                   "custom-call"):
-            c.bytes += out_bytes + sum(
-                _parse_shapes(shapes.get(a, "")) for a in args
-            )
+            c.bytes += out_bytes + sum(_parse_shapes(a) for a in arg_shapes)
             continue
         if op in ("pad", "concatenate", "slice"):
             c.bytes += out_bytes

@@ -1,0 +1,74 @@
+"""Cross-version jax API shims (the container pins jax 0.4.x).
+
+Newer jax promoted ``shard_map`` to the top level and replaced the
+``with mesh:`` context with ``jax.sharding.set_mesh`` /
+``get_abstract_mesh``.  All mesh-touching code imports from here so the
+same source runs on both API generations.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (old).
+
+    ``check_vma`` is the new name of the old ``check_rep`` replication
+    check; translated to whichever the running jax understands."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as fn_old
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return fn_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name: str, mesh=None):
+    """Static size of a mapped axis inside shard_map.  New jax exposes
+    ``jax.lax.axis_size``; old jax reads it off the (closed-over) mesh."""
+    f = getattr(jax.lax, "axis_size", None)
+    if f is not None:
+        return f(axis_name)
+    return int(mesh.shape[axis_name])
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` marks a value device-varying for the new VMA
+    (varying-manual-axes) checker; old jax has no such notion — identity."""
+    f = getattr(jax.lax, "pvary", None)
+    return x if f is None else f(x, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for sharding constraints."""
+    sm = getattr(jax.sharding, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    # Old jax: a physical Mesh is itself the context manager.
+    return mesh
+
+
+def get_abstract_mesh():
+    """The active mesh, or None when none is set (old jax returns the
+    physical mesh — it carries the same ``axis_names`` surface)."""
+    f = getattr(jax.sharding, "get_abstract_mesh", None)
+    if f is not None:
+        return f()
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+@contextlib.contextmanager
+def maybe_set_mesh(mesh):
+    """set_mesh that tolerates mesh=None (no-op)."""
+    if mesh is None:
+        yield
+        return
+    with set_mesh(mesh):
+        yield

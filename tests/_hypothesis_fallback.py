@@ -1,0 +1,69 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (see conftest.py).
+
+The container does not ship hypothesis and nothing may be pip-installed, so
+when the real library is absent this module is registered under the
+``hypothesis`` / ``hypothesis.strategies`` names.  It implements exactly the
+subset the test-suite uses — ``@given`` + ``@settings`` with ``integers`` /
+``sampled_from`` / ``.map`` strategies — by drawing ``max_examples``
+pseudo-random examples from a fixed-seed PRNG, so runs stay reproducible.
+No shrinking, no example database: a failing example fails the test directly
+with its drawn arguments in the traceback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, f):
+        return _Strategy(lambda rnd: f(self._draw(rnd)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(elements))
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(f):
+        f._max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(*strategies):
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 10)
+            rnd = random.Random(0xD157A)
+            for _ in range(n):
+                drawn = tuple(s._draw(rnd) for s in strategies)
+                f(*args, *drawn, **kwargs)
+
+        # Hide the drawn parameters from pytest's fixture resolution, as the
+        # real hypothesis does: strategies fill the rightmost params, any
+        # leading params stay visible (fixtures).
+        params = list(inspect.signature(f).parameters.values())
+        wrapper.__signature__ = inspect.Signature(
+            params[: len(params) - len(strategies)]
+        )
+        return wrapper
+
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.sampled_from = sampled_from

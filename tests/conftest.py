@@ -5,6 +5,20 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # the container has no hypothesis and pip installs are off-limits
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"),
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import jax  # noqa: E402
 import pytest  # noqa: E402
 

@@ -101,3 +101,30 @@ def test_attention_cost_model_sanity():
     assert c_distr["fusion_adds"] > 0 and c_exact["fusion_adds"] == 0
     # total MXU work strictly decreases — the paper's speedup source.
     assert c_distr["mxu_flops"] < c_exact["mxu_flops"]
+
+
+def test_attention_cost_io_bytes():
+    b, h, n, d = 1, 8, 4096, 128
+    w = 2
+    c_exact = ops.attention_cost(b, h, n, n, d)
+    # Exact: Q + K + V reads + O write, nothing zeroed out.
+    assert c_exact["hbm_bytes"] == w * (4 * b * h * n * d)
+    # Distr adds only the sampled Q̂ stream (d/G* extra columns); K̂ stays
+    # in VMEM and must not contribute.
+    c_distr = ops.attention_cost(b, h, n, n, d, group_size=2)
+    assert c_distr["hbm_bytes"] == c_exact["hbm_bytes"] + w * b * h * n * (d // 2)
+
+
+def test_attention_cost_backward_terms():
+    c_exact = ops.attention_cost(1, 8, 4096, 4096, 128, causal=True)
+    c_distr = ops.attention_cost(1, 8, 4096, 4096, 128, causal=True, group_size=2)
+    # Backward does strictly more MXU work than forward (5 matmul family vs
+    # 2, with S recomputed in both backward kernels).
+    for c in (c_exact, c_distr):
+        assert c["bwd_mxu_flops"] > c["mxu_flops"]
+        assert c["fwd_bwd_mxu_flops"] == c["mxu_flops"] + c["bwd_mxu_flops"]
+        assert c["bwd_hbm_bytes"] > 0
+    # The paper's reduction survives the backward: score-space matmuls
+    # (4 of 7) contract over d/G*.
+    assert c_distr["bwd_mxu_flops"] < c_exact["bwd_mxu_flops"]
+    assert c_distr["fwd_bwd_mxu_flops"] < c_exact["fwd_bwd_mxu_flops"]
