@@ -1,8 +1,10 @@
 """Forward+backward attention timing: pure-JAX scan path vs the fused
 custom_vjp Pallas kernel path (flash and distr).
 
-CPU wall time is not TPU time — the kernel path runs in interpret mode here —
-so each row also carries the analytic fwd+bwd MXU-FLOP ratio from
+CPU wall time is not TPU time — the kernel path runs in interpret mode on
+this container — so every record carries ``backend``/``interpret`` labels
+(kernel timings are interpret-mode unless backend is TPU; the XLA-path
+timings are always compiled) plus the analytic fwd+bwd MXU-FLOP ratio from
 ``ops.attention_cost``, the roofline-honest comparison (the quantity the
 37%-over-FA-2 claim rides on).  Emits ``BENCH_attention_bwd.json`` at the
 repo root so the perf trajectory is recorded per PR.
@@ -23,7 +25,7 @@ from repro.core.distr_attention import distr_attention as core_distr
 from repro.core.flash_reference import blockwise_flash_reference
 from repro.kernels import ops
 from repro.kernels.ops import attention_cost
-from benchmarks.common import save_result, timeit
+from benchmarks.common import backend_info, save_result, timeit, timing_label
 
 B, H = 1, 4
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_attention_bwd.json")
@@ -66,11 +68,14 @@ def run() -> list[tuple]:
                 kind="flash", d=d, n=n,
                 xla_fwd_bwd_us=t_xla_flash, kernel_fwd_bwd_us=t_krn_flash,
                 fwd_bwd_mxu_flops=c_f["fwd_bwd_mxu_flops"],
+                # The XLA reference always runs compiled; the kernel column
+                # follows the backend auto-detect (interpret off-TPU).
+                **backend_info(),
             )
             records.append(rec)
             rows.append((
                 f"attn_bwd/flash/d={d}/n={n}", t_krn_flash,
-                f"xla_scan={t_xla_flash:.0f}us",
+                f"xla_scan={t_xla_flash:.0f}us {timing_label()}",
             ))
 
             # --- distr: checkpoint-scan core path vs kernel custom_vjp.
@@ -94,11 +99,12 @@ def run() -> list[tuple]:
                     scan_fwd_bwd_us=t_core, kernel_fwd_bwd_us=t_krn,
                     fwd_bwd_mxu_flops=c_d["fwd_bwd_mxu_flops"],
                     fwd_bwd_mxu_ratio_vs_flash=ratio,
+                    **backend_info(),
                 )
                 records.append(rec)
                 rows.append((
                     f"attn_bwd/distr/d={d}/n={n}/G={g}", t_krn,
-                    f"scan={t_core:.0f}us mxu_ratio={ratio:.3f}",
+                    f"scan={t_core:.0f}us mxu_ratio={ratio:.3f} {timing_label()}",
                 ))
 
     save_result("attention_bwd", records)

@@ -1,4 +1,11 @@
-"""Shared benchmark utilities: timing, CSV rows, result persistence."""
+"""Shared benchmark utilities: timing, CSV rows, result persistence.
+
+Every BENCH record that carries a wall-clock number must also carry the
+``backend_info()`` fields: CPU wall time of an interpret-mode Pallas kernel
+is *not* comparable to a compiled-kernel or XLA timing, and unlabeled rows
+read like a kernel-vs-XLA comparison when they are not (the acceptance
+criterion for the perf trajectory).
+"""
 from __future__ import annotations
 
 import json
@@ -8,6 +15,24 @@ import time
 import jax
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def backend_info(interpret: bool | None = None) -> dict:
+    """Labels for timing records: the JAX backend and whether Pallas kernels
+    ran in interpreter mode (None → ``kernels.ops.default_interpret``, the
+    same rule the ops apply; pass False for pure-XLA timings)."""
+    from repro.kernels.ops import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    return {"backend": jax.default_backend(), "interpret": bool(interpret)}
+
+
+def timing_label(interpret: bool | None = None) -> str:
+    """Short derived-column suffix, e.g. ``backend=cpu:interpret``."""
+    info = backend_info(interpret)
+    mode = "interpret" if info["interpret"] else "compiled"
+    return f"backend={info['backend']}:{mode}"
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:

@@ -1,5 +1,14 @@
-"""Beyond-paper: fused-K̂ decode cache (serve.kv_cache) — KV-read bytes per
-decode step and score fidelity vs the exact cache (EXPERIMENTS.md §Perf)."""
+"""Beyond-paper: fused-K̂ decode cache (serve.kv_cache) on the split-K
+flash-decoding kernel — KV-read bytes per decode step, score fidelity vs the
+exact cache, and kernel-vs-scan per-token latency at several live lengths
+(EXPERIMENTS.md §Perf).
+
+The fused variant stacks two savings: the ring cache's live-length grid
+(bytes ∝ length, not max_len — benchmarks/decode.py) and the d/G*-wide
+score-stage stream, (1−1/G*)·½ of KV traffic.  Timings are labeled by
+backend/interpret — on this CPU container the kernel column is Pallas
+interpreter wall time, not TPU time; the byte model carries the claim.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,13 +16,20 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import grouping
+from repro.core.flash_reference import reference_attention
+from repro.kernels import ops
+from repro.roofline.analysis import decode_attention_cost
 from repro.serve import kv_cache
-from benchmarks.common import save_result
+from benchmarks.common import backend_info, save_result, timeit, timing_label
+
+MAX_LEN = 512
+BLOCK_K = 64
+LIVE_LENGTHS = (64, 256, 512)
 
 
 def run() -> list[tuple]:
     rows, records = [], []
-    cfg = get_config("qwen2.5-32b")  # full dims; math only, tiny arrays below
+    cfg = get_config("qwen2.5-32b")  # full head geometry; tiny batch below
     dh, hkv, hq = cfg.head_dim_, cfg.n_kv_heads, cfg.n_heads
     for g in (2, 4):
         # bytes read per cached token per decode step (per layer, kv head):
@@ -23,11 +39,12 @@ def run() -> list[tuple]:
         fused_bytes = (dh // g) * 2 + dh * 2  # K̂ bf16 + V bf16
         saving = 1 - fused_bytes / exact_bytes
 
-        # fidelity on gaussian K/q with a static permutation
+        # fidelity + latency on gaussian K/q with a static permutation
         perms = jax.random.permutation(jax.random.PRNGKey(0), dh)[None]
         perms = jnp.broadcast_to(perms, (hkv, dh)).astype(jnp.int32)
-        k = jax.random.normal(jax.random.PRNGKey(1), (1, hkv, 512, dh))
-        q = jax.random.normal(jax.random.PRNGKey(2), (1, hq, 1, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, hkv, MAX_LEN, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, hkv, MAX_LEN, dh))
+        q = jax.random.normal(jax.random.PRNGKey(3), (1, hq, 1, dh))
         k_f = grouping.fuse_columns(k.astype(jnp.float32), perms[None], g)
         q_s = kv_cache.sample_q(q, perms, g, hq // hkv)
         rep = hq // hkv
@@ -36,10 +53,49 @@ def run() -> list[tuple]:
         corr = float(jnp.corrcoef(
             jnp.stack([s_apx.reshape(-1), s_ext.reshape(-1)])
         )[0, 1])
-        records.append(dict(g=g, kv_byte_saving=saving, score_corr=corr))
+        records.append(dict(
+            g=g, kv_byte_saving=saving, score_corr=corr, **backend_info()
+        ))
         rows.append((
             f"distr_decode/G={g}", 0.0,
             f"kv_read_saving={saving*100:.1f}% score_corr={corr:.3f}",
         ))
+
+        # kernel op (fused-K̂ split-K decode) vs the pure-JAX scan path the
+        # serve layer used before this op existed, at several live lengths.
+        scale = 1.0 / dh ** 0.5
+        kernel_fn = jax.jit(lambda q, kf, v, lens: ops.decode_attention(
+            q, None, v, lengths=lens, k_fused=kf, perm=perms,
+            group_size=g, scale=scale, block_k=BLOCK_K,
+        ))
+
+        def scan_fn(q, kf, v, lens):
+            q_smp = kv_cache.sample_q(q, perms, g, hq // hkv)
+            kv_mask = jnp.arange(MAX_LEN)[None, :] < lens[:, None]
+            return reference_attention(
+                q_smp, kf.astype(q_smp.dtype), v.astype(q_smp.dtype),
+                causal=False, scale=scale, kv_mask=kv_mask,
+            )
+
+        scan_jit = jax.jit(scan_fn)
+        for live in LIVE_LENGTHS:
+            lens = jnp.full((1,), live, jnp.int32)
+            t_kernel = timeit(kernel_fn, q, k_f.astype(q.dtype), v, lens)
+            t_scan = timeit(scan_jit, q, k_f, v, lens)
+            cost = decode_attention_cost(
+                1, hq, hkv, live, MAX_LEN, dh, group_size=g, block_k=BLOCK_K
+            )
+            records.append(dict(
+                g=g, live_length=live, max_len=MAX_LEN,
+                kernel_us=t_kernel, scan_us=t_scan,
+                kv_bytes_per_token=cost["kv_bytes"],
+                dense_kv_bytes_per_token=cost["dense_kv_bytes"],
+                **backend_info(),
+            ))
+            rows.append((
+                f"distr_decode/G={g}/len={live}", t_kernel,
+                f"scan={t_scan:.0f}us kv_bytes={cost['kv_bytes']} "
+                f"{timing_label()}",
+            ))
     save_result("distr_decode", records)
     return rows

@@ -1,5 +1,13 @@
 """Paper Table 6: LM prefill time-to-first-token at varying prompt lengths,
-exact vs DistrAttention (reduced llama-like config on CPU)."""
+exact vs DistrAttention (reduced llama-like config on CPU) — plus the serve
+side of the same trajectory: per-token decode latency at several live
+lengths, split-K decode kernel path vs the pure-JAX masked-scan path
+(``impl="reference"``) that attends over the whole padded cache.
+
+Timing rows carry backend/interpret labels (the kernel path runs in Pallas
+interpreter mode off-TPU; the roofline story lives in
+``roofline.analysis.decode_attention_cost`` / BENCH_decode.json).
+"""
 from __future__ import annotations
 
 import jax
@@ -7,8 +15,11 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.serve.serve_step import make_prefill
-from benchmarks.common import save_result, timeit
+from repro.serve.serve_step import make_decode_step, make_prefill
+from benchmarks.common import backend_info, save_result, timeit, timing_label
+
+MAX_LEN = 512
+DECODE_LIVE = (64, 128, 256)
 
 
 def run() -> list[tuple]:
@@ -23,7 +34,37 @@ def run() -> list[tuple]:
             toks = jax.random.randint(jax.random.PRNGKey(1), (1, n), 0, cfg.vocab)
             prefill = jax.jit(make_prefill(cfg, n))
             us = timeit(prefill, params, toks, warmup=1, iters=3)
-            records.append(dict(impl=impl, n=n, us=us))
+            # xla_flash/distr prefill is pure XLA — always compiled, no
+            # Pallas kernel involved.
+            records.append(dict(impl=impl, n=n, us=us, kind="prefill",
+                                **backend_info(False)))
             rows.append((f"ttft/{impl}/n={n}", us, f"prefill_tokens={n}"))
+
+    # --- decode: per-token latency vs live length.  The kernel path (any
+    # non-reference impl) walks ceil(length/block_k) KV blocks; the
+    # reference path masks over all MAX_LEN slots every token.
+    for impl in ("xla_flash", "reference"):
+        cfg = base.replace(attention=base.attention.with_impl(impl))
+        decode = jax.jit(make_decode_step(cfg))
+        prefill = jax.jit(make_prefill(cfg, MAX_LEN))
+        path = "kernel" if impl != "reference" else "scan"
+        for live in DECODE_LIVE:
+            toks = jax.random.randint(
+                jax.random.PRNGKey(2), (1, live), 0, cfg.vocab
+            )
+            _, cache = prefill(params, toks)
+            pos = jnp.full((1,), live, jnp.int32)
+            nxt = toks[:, -1:]
+            us = timeit(decode, params, nxt, cache, pos, warmup=1, iters=3)
+            records.append(dict(
+                impl=impl, kind="decode", live_length=live, max_len=MAX_LEN,
+                us_per_token=us,
+                **backend_info(None if impl != "reference" else False),
+            ))
+            rows.append((
+                f"decode_tok/{path}/len={live}", us,
+                f"max_len={MAX_LEN} "
+                + timing_label(None if path == "kernel" else False),
+            ))
     save_result("llama_ttft", records)
     return rows

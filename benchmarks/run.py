@@ -13,6 +13,8 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
   Fig8     accuracy_train   — training-loss trajectories exact vs distr
   §4.8     lsh_grouping     — LSH grouping share of attention time
   extra    distr_decode     — beyond-paper fused-K̂ decode cache
+  §Decode  decode           — split-K flash-decoding: tokens/s + per-token
+                              KV bytes vs live length (BENCH_decode.json)
 """
 from __future__ import annotations
 
@@ -31,6 +33,7 @@ BENCHES = [
     "accuracy_train",
     "multidevice",
     "distr_decode",
+    "decode",
 ]
 
 

@@ -97,3 +97,59 @@ def attend(
             q, k, v, cfg.distr, causal=causal, scale=scale, interpret=cfg.interpret,
         )
     raise ValueError(f"unknown attention impl {cfg.impl!r}; choose from {IMPLS}")
+
+
+def attend_decode(
+    q: jnp.ndarray,
+    k: jnp.ndarray | None,
+    v: jnp.ndarray,
+    cfg: AttentionConfig,
+    *,
+    lengths: jnp.ndarray | None = None,
+    k_fused: jnp.ndarray | None = None,
+    perm: jnp.ndarray | None = None,
+    group_size: int = 1,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Decode-path attention dispatch: one (or a few speculative) query
+    tokens against a (B, Hkv, S, d) KV cache with per-slot live ``lengths``.
+
+    Every impl except ``reference`` routes to the split-K flash-decoding
+    Pallas op (``kernels.ops.decode_attention``) — per-token KV traffic then
+    scales with the live length, not S.  ``reference`` keeps the pure-JAX
+    masked-softmax oracle (the parity baseline in tests).  The fused-K̂
+    variant is selected by passing ``k_fused`` + ``perm`` + ``group_size``
+    (see serve.kv_cache); ``k`` may be None in that case.  ``scale`` always
+    refers to the full head dim (default 1/√d from V) on both paths.
+    """
+    if cfg.impl not in IMPLS:
+        raise ValueError(
+            f"unknown attention impl {cfg.impl!r}; choose from {IMPLS}"
+        )
+    scale = float(scale) if scale is not None else 1.0 / (v.shape[-1] ** 0.5)
+    if cfg.impl == "reference":
+        from repro.core import grouping
+
+        nk = (k_fused if k_fused is not None else k).shape[2]
+        kv_mask = (
+            jnp.arange(nk)[None, :] < lengths[:, None]
+            if lengths is not None
+            else None
+        )
+        if k_fused is not None:
+            q_s = grouping.sample_q_heads(q, perm, group_size)
+            return reference_attention(
+                q_s, k_fused.astype(q_s.dtype), v.astype(q_s.dtype),
+                causal=False, scale=scale, kv_mask=kv_mask,
+            )
+        return reference_attention(
+            q, k.astype(q.dtype), v.astype(q.dtype),
+            causal=False, scale=scale, kv_mask=kv_mask,
+        )
+    from repro.kernels import ops  # deferred: kernels are optional at import
+
+    return ops.decode_attention(
+        q, k, v, lengths=lengths, k_fused=k_fused, perm=perm,
+        group_size=group_size, scale=scale, block_k=cfg.block_k,
+        interpret=cfg.interpret,
+    )

@@ -30,6 +30,23 @@ def sample_columns(x: jnp.ndarray, perm: jnp.ndarray, group_size: int) -> jnp.nd
     return _take_columns(x, sampled_indices(perm, group_size))
 
 
+def sample_q_heads(q: jnp.ndarray, perm: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Sample Q columns under a *per-KV-head* static permutation (the decode
+    cache's fixed grouping — serve.kv_cache.static_perms).
+
+    q: ``(B, Hq, n, d)``; perm: ``(Hkv, d)`` with Hq a multiple of Hkv →
+    ``(B, Hq, n, d // group_size)``.  Every query head in a GQA group shares
+    its KV head's permutation.  Single home for the kernel wrapper, the
+    reference dispatch, and the serve cache (they must agree exactly).
+    """
+    b, hq, n, d = q.shape
+    hkv = perm.shape[0]
+    idx = sampled_indices(perm, group_size)  # (Hkv, d/g)
+    qg = q.reshape(b, hkv, hq // hkv, n, d)
+    out = jnp.take_along_axis(qg, idx[None, :, None, None, :], axis=-1)
+    return out.reshape(b, hq, n, d // group_size)
+
+
 def fuse_columns(x: jnp.ndarray, perm: jnp.ndarray, group_size: int) -> jnp.ndarray:
     """K-side fusion: permute columns then sum each run of ``group_size``.
 

@@ -1,4 +1,5 @@
-"""Pallas TPU kernels: flash attention (exact), DistrAttention, SSD.
+"""Pallas TPU kernels: flash attention (exact), DistrAttention, split-K
+flash-decoding (serve path), SSD.
 
 Each kernel ships with a jit wrapper in ``ops.py`` and a pure-jnp oracle in
 ``ref.py``; tests sweep shapes/dtypes and assert allclose in interpret mode.

@@ -5,8 +5,9 @@ Design (DESIGN.md §Backward): the forward saves only the per-row logsumexp
 IO-aware recomputation instead of materialising the N×N probability matrix
 (Dao, 2023).  Three kernel families:
 
-* ``delta``  — D = rowsum(dO ∘ O), one cheap VPU pass, lane-replicated like
-  the LSE so the matmul kernels can read it as a (block_q, 1) column.
+* ``delta``  — D = rowsum(dO ∘ O), one cheap VPU pass.  Like the LSE it is
+  stored per-row f32 ``(BHq, N)`` in HBM (no ×128 lane replication); the
+  matmul kernels re-broadcast it to a (block_q, 1) column on load.
 * ``dq``     — grid (B·Hq, N/l, Nk/m), KV innermost, dQ accumulated in VMEM
   scratch across KV blocks:  dQ = Σ_j dS_j K_j · scale.
 * ``dkv``    — grid (B·Hq, Nk/m, N/l), Q innermost, dK/dV accumulated across
@@ -37,7 +38,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.distr_attention import fuse_k_columns
-from repro.kernels.flash_attention import NEG_INF, STATS_LANES  # noqa: F401
+from repro.kernels.flash_attention import NEG_INF
 from repro.kernels.tpu_compat import CompilerParams
 
 
@@ -49,8 +50,9 @@ from repro.kernels.tpu_compat import CompilerParams
 def _delta_kernel(o_ref, do_ref, d_ref):
     o = o_ref[...].astype(jnp.float32)
     do = do_ref[...].astype(jnp.float32)
-    d = (o * do).sum(axis=1, keepdims=True)  # (block_q, 1)
-    d_ref[...] = jnp.broadcast_to(d, d_ref.shape)
+    # Per-row f32 write (not lane-replicated): the matmul kernels
+    # re-broadcast on load.
+    d_ref[...] = (o * do).sum(axis=1)
 
 
 def delta_kernel_call(
@@ -60,7 +62,7 @@ def delta_kernel_call(
     block_q: int,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """D = rowsum(dO ∘ O).  o, do: (BHq, N, d) → (BHq, N, STATS_LANES) f32."""
+    """D = rowsum(dO ∘ O).  o, do: (BHq, N, d) → (BHq, N) f32 per-row."""
     bhq, n, d = o.shape
     grid = (bhq, n // block_q)
     return pl.pallas_call(
@@ -70,8 +72,8 @@ def delta_kernel_call(
             pl.BlockSpec((None, block_q, d), lambda bh, i: (bh, i, 0)),
             pl.BlockSpec((None, block_q, d), lambda bh, i: (bh, i, 0)),
         ],
-        out_specs=pl.BlockSpec((None, block_q, STATS_LANES), lambda bh, i: (bh, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bhq, n, STATS_LANES), jnp.float32),
+        out_specs=pl.BlockSpec((None, block_q), lambda bh, i: (bh, i)),
+        out_shape=jax.ShapeDtypeStruct((bhq, n), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
@@ -131,8 +133,10 @@ def _flash_dq_kernel(
         k = k_ref[...].astype(jnp.float32)
         v = v_ref[...].astype(jnp.float32)
         do = do_ref[...].astype(jnp.float32)
-        lse = lse_ref[...][:, :1]
-        delta = delta_ref[...][:, :1]
+        # Per-row residuals: re-broadcast the (block_q,) row stats to the
+        # (block_q, 1) column layout the block math wants.
+        lse = lse_ref[...][:, None]
+        delta = delta_ref[...][:, None]
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -178,8 +182,8 @@ def flash_dq_kernel_call(
             pl.BlockSpec((None, block_k, d), kv_index),
             pl.BlockSpec((None, block_k, d), kv_index),
             pl.BlockSpec((None, block_q, d), q_index),
-            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
-            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
+            pl.BlockSpec((None, block_q), lambda bh, i, j: (bh, i)),
+            pl.BlockSpec((None, block_q), lambda bh, i, j: (bh, i)),
         ],
         out_specs=pl.BlockSpec((None, block_q, d), q_index),
         out_shape=jax.ShapeDtypeStruct((bhq, n, d), jnp.float32),
@@ -216,8 +220,10 @@ def _flash_dkv_kernel(
         k = k_ref[...].astype(jnp.float32)
         v = v_ref[...].astype(jnp.float32)
         do = do_ref[...].astype(jnp.float32)
-        lse = lse_ref[...][:, :1]
-        delta = delta_ref[...][:, :1]
+        # Per-row residuals: re-broadcast the (block_q,) row stats to the
+        # (block_q, 1) column layout the block math wants.
+        lse = lse_ref[...][:, None]
+        delta = delta_ref[...][:, None]
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -269,8 +275,8 @@ def flash_dkv_kernel_call(
             pl.BlockSpec((None, block_k, d), kv_index),
             pl.BlockSpec((None, block_k, d), kv_index),
             pl.BlockSpec((None, block_q, d), q_index),
-            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
-            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
+            pl.BlockSpec((None, block_q), lambda bh, j, i: (bh, i)),
+            pl.BlockSpec((None, block_q), lambda bh, j, i: (bh, i)),
         ],
         out_specs=[
             pl.BlockSpec((None, block_k, d), dkv_index),
@@ -321,8 +327,10 @@ def _distr_dq_kernel(
         v = v_ref[...].astype(jnp.float32)
         do = do_ref[...].astype(jnp.float32)
         perm = perm_ref[0]
-        lse = lse_ref[...][:, :1]
-        delta = delta_ref[...][:, :1]
+        # Per-row residuals: re-broadcast the (block_q,) row stats to the
+        # (block_q, 1) column layout the block math wants.
+        lse = lse_ref[...][:, None]
+        delta = delta_ref[...][:, None]
 
         k_hat = fuse_k_columns(k, perm, group_size)  # (block_k, dg)
         s = jax.lax.dot_general(
@@ -373,8 +381,8 @@ def distr_dq_kernel_call(
             pl.BlockSpec((None, block_k, d), lambda bh, i, j: (bh // q_per_kv, j, 0)),
             pl.BlockSpec((None, 1, d), lambda bh, i, j: (bh, i, 0)),
             pl.BlockSpec((None, block_q, d), lambda bh, i, j: (bh, i, 0)),
-            pl.BlockSpec((None, block_q, STATS_LANES), lambda bh, i, j: (bh, i, 0)),
-            pl.BlockSpec((None, block_q, STATS_LANES), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((None, block_q), lambda bh, i, j: (bh, i)),
+            pl.BlockSpec((None, block_q), lambda bh, i, j: (bh, i)),
         ],
         out_specs=pl.BlockSpec((None, block_q, dg), lambda bh, i, j: (bh, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bhq, n, dg), jnp.float32),
@@ -413,8 +421,10 @@ def _distr_dkv_kernel(
         do = do_ref[...].astype(jnp.float32)
         perm = perm_ref[0]  # (d,) this Q block's permutation
         inv_perm = inv_perm_ref[0]  # (d,) its inverse
-        lse = lse_ref[...][:, :1]
-        delta = delta_ref[...][:, :1]
+        # Per-row residuals: re-broadcast the (block_q,) row stats to the
+        # (block_q, 1) column layout the block math wants.
+        lse = lse_ref[...][:, None]
+        delta = delta_ref[...][:, None]
 
         k_hat = fuse_k_columns(k, perm, group_size)  # re-fused under this Q block
         s = jax.lax.dot_general(
@@ -480,8 +490,8 @@ def distr_dkv_kernel_call(
             pl.BlockSpec((None, 1, d), q_index),
             pl.BlockSpec((None, 1, d), q_index),
             pl.BlockSpec((None, block_q, d), q_index),
-            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
-            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
+            pl.BlockSpec((None, block_q), lambda bh, j, i: (bh, i)),
+            pl.BlockSpec((None, block_q), lambda bh, j, i: (bh, i)),
         ],
         out_specs=[
             pl.BlockSpec((None, block_k, d), dkv_index),

@@ -114,7 +114,7 @@ def _distr_kernel(
         if with_lse:
             m_final = m_scr[...][:, :1]
             lse = jnp.where(l_final == 0.0, NEG_INF, m_final + jnp.log(denom))
-            lse_ref[...] = jnp.broadcast_to(lse, lse_ref.shape)
+            lse_ref[...] = lse[:, 0]  # per-row f32 (not lane-replicated)
 
 
 def distr_attention_kernel_call(
@@ -138,7 +138,7 @@ def distr_attention_kernel_call(
     k, v:  (BHkv, Nk, d) (padded Nk).
     perm:  (BHq, N/block_q, d) int32 per-Q-block permutations.
 
-    Returns ``o`` or ``(o, lse)`` (lane-replicated row logsumexp, f32) when
+    Returns ``o`` or ``(o, lse)`` (per-row logsumexp, ``(BHq, N)`` f32) when
     ``return_residuals`` — the residual consumed by kernels/backward.py.
     """
     bhq, n, dg = q_hat.shape
@@ -162,11 +162,11 @@ def distr_attention_kernel_call(
     if return_residuals:
         out_specs = [
             out_specs,
-            pl.BlockSpec((None, block_q, STATS_LANES), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((None, block_q), lambda bh, i, j: (bh, i)),
         ]
         out_shape = [
             out_shape,
-            jax.ShapeDtypeStruct((bhq, n, STATS_LANES), jnp.float32),
+            jax.ShapeDtypeStruct((bhq, n), jnp.float32),
         ]
     return pl.pallas_call(
         kernel,

@@ -7,9 +7,13 @@ KV-block iteration is the innermost ("arbitrary") grid dimension so the
 inner loop held in registers/SMEM.
 
 With ``return_residuals=True`` the kernel additionally emits the per-row
-logsumexp ``L = m + log l`` (lane-replicated f32, DESIGN.md §Backward) —
-the only softmax statistic the FA-2 backward needs; dQ/dK/dV then recompute
+logsumexp ``L = m + log l`` as a plain ``(BHq, N)`` f32 row vector — the
+only softmax statistic the FA-2 backward needs; dQ/dK/dV then recompute
 the score blocks instead of materialising them (kernels/backward.py).
+Only the VMEM scratch keeps the lane-replicated ``(block_q, 128)`` layout
+(TPU vector layouts want a lane-width minor dim); the HBM residual is
+per-row — 128× less stats traffic than replicating the scratch layout out
+(DESIGN.md §Backward).
 
 Validated against ``ref.flash_attention_ref`` under ``interpret=True`` (this
 container is CPU-only); on real TPUs the ops.py wrapper auto-selects
@@ -27,8 +31,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.tpu_compat import CompilerParams
 
 NEG_INF = -1e30
-# Softmax stats are stored lane-replicated: TPU vector layouts want the minor
-# dimension to be a multiple of the 128-lane width.
+# In-kernel softmax-stat *scratch* is lane-replicated: TPU vector layouts
+# want the minor dimension to be a multiple of the 128-lane width.  HBM
+# residuals (LSE, D) are per-row f32 — re-broadcast on load in the backward
+# kernels (one sublane↔lane relayout per block, vs 128× the HBM traffic).
 STATS_LANES = 128
 
 
@@ -106,7 +112,7 @@ def _flash_kernel(
             lse = jnp.where(
                 l_final == 0.0, NEG_INF, m_final + jnp.log(denom)
             )
-            lse_ref[...] = jnp.broadcast_to(lse, lse_ref.shape)
+            lse_ref[...] = lse[:, 0]  # per-row f32 (not lane-replicated)
 
 
 def flash_attention_kernel_call(
@@ -128,8 +134,8 @@ def flash_attention_kernel_call(
     The KV head for flattened q index ``bh`` is resolved inside the BlockSpec
     index maps (GQA without materialising repeated K/V).
 
-    Returns ``o`` or ``(o, lse)`` with ``lse: (BHq, N, STATS_LANES)`` f32
-    (lane-replicated row logsumexp) when ``return_residuals``.
+    Returns ``o`` or ``(o, lse)`` with ``lse: (BHq, N)`` f32 (per-row
+    logsumexp) when ``return_residuals``.
     """
     bhq, n, d = q.shape
     bhkv, nk_len, _ = k.shape
@@ -160,11 +166,11 @@ def flash_attention_kernel_call(
     if return_residuals:
         out_specs = [
             out_specs,
-            pl.BlockSpec((None, block_q, STATS_LANES), q_index),
+            pl.BlockSpec((None, block_q), lambda bh, i, j: (bh, i)),
         ]
         out_shape = [
             out_shape,
-            jax.ShapeDtypeStruct((bhq, n, STATS_LANES), jnp.float32),
+            jax.ShapeDtypeStruct((bhq, n), jnp.float32),
         ]
     return pl.pallas_call(
         kernel,

@@ -27,12 +27,13 @@ import jax.numpy as jnp
 from repro.core import grouping, lsh
 from repro.core.distr_attention import DistrConfig, compute_block_permutations
 from repro.kernels import backward as bwd
+from repro.kernels import decode as decode_kernels
 from repro.kernels.distr_attention import distr_attention_kernel_call
 from repro.kernels.flash_attention import flash_attention_kernel_call
 from repro.kernels.ssd import ssd_kernel_call
 
 
-def _default_interpret() -> bool:
+def default_interpret() -> bool:
     """Compiled Pallas on TPU, interpreter everywhere else (CPU container)."""
     return jax.default_backend() != "tpu"
 
@@ -159,7 +160,7 @@ def flash_attention(
     (B,Hkv,Nk,d).  ``interpret=None`` auto-detects the backend."""
     scale = float(scale) if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     return _flash_attention_jit(q, k, v, causal, scale, block_q, block_k, interpret)
 
 
@@ -312,8 +313,134 @@ def distr_attention(
     """
     scale = float(scale) if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     return _distr_attention_jit(q, k, v, cfg, causal, scale, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Flash-decoding (split-K) — the serve-path hot op
+# ---------------------------------------------------------------------------
+
+
+def _pack_gqa_rows(q: jnp.ndarray, hkv: int) -> tuple[jnp.ndarray, int]:
+    """(B, Hq, q_len, d) → (B, Hkv, rows_pad, d): all query heads sharing a
+    KV head (× q_len) packed into the kernel's row dimension, padded to the
+    sublane width.  Returns (packed, rows_live)."""
+    b, hq, q_len, d = q.shape
+    rows_live = (hq // hkv) * q_len
+    packed = q.reshape(b, hkv, rows_live, d)
+    pad = (-rows_live) % decode_kernels.ROW_ALIGN
+    if pad:
+        packed = jnp.pad(packed, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return packed, rows_live
+
+
+def _unpack_gqa_rows(o: jnp.ndarray, rows_live: int, hq: int) -> jnp.ndarray:
+    """(B, Hkv, rows_pad, d) → (B, Hq, q_len, d)."""
+    b, hkv, _, d = o.shape
+    q_len = rows_live * hkv // hq
+    return o[:, :, :rows_live, :].reshape(b, hq, q_len, d)
+
+
+def _decode_impl(q_packed, k_score, v, lengths, *, hq, rows_live, scale,
+                 block_k, q_len, interpret):
+    nk = k_score.shape[2]
+    block_k = min(block_k, nk)
+    pad = (-nk) % block_k
+    if pad:  # dead tail: clamped index maps keep it out of the KV stream
+        k_score = jnp.pad(k_score, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    o, m, l = decode_kernels.decode_kernel_call(
+        q_packed, k_score, v, lengths,
+        scale=scale, block_k=block_k, q_len=q_len, interpret=interpret,
+    )
+    return _unpack_gqa_rows(
+        decode_kernels.merge_splits(o, m, l), rows_live, hq
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "q_len", "interpret")
+)
+def _decode_attention_jit(q, k, v, lengths, scale, block_k, q_len, interpret):
+    b, hq, _, d = q.shape
+    hkv = k.shape[1]
+    q_packed, rows_live = _pack_gqa_rows(q, hkv)
+    out = _decode_impl(
+        q_packed, k, v, lengths, hq=hq, rows_live=rows_live, scale=scale,
+        block_k=block_k, q_len=q_len, interpret=interpret,
+    )
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "scale", "block_k", "q_len", "interpret"),
+)
+def _decode_attention_fused_jit(q, k_fused, v, perm, lengths, group_size,
+                                scale, block_k, q_len, interpret):
+    hq, hkv = q.shape[1], k_fused.shape[1]
+    # Sample Q columns under the layer's static per-KV-head permutation —
+    # decode has no per-Q-block LSH stage (serve.kv_cache.static_perms).
+    q_s = grouping.sample_q_heads(q, perm, group_size)
+    q_packed, rows_live = _pack_gqa_rows(q_s, hkv)
+    out = _decode_impl(
+        q_packed, k_fused, v, lengths, hq=hq, rows_live=rows_live,
+        scale=scale, block_k=block_k, q_len=q_len, interpret=interpret,
+    )
+    return out.astype(q.dtype)
+
+
+def _decode_lengths(lengths, b: int, nk: int) -> jnp.ndarray:
+    if lengths is None:
+        lengths = jnp.full((b,), nk, jnp.int32)
+    return jnp.minimum(jnp.asarray(lengths, jnp.int32), nk)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    lengths: jnp.ndarray | None = None,
+    k_fused: jnp.ndarray | None = None,
+    perm: jnp.ndarray | None = None,
+    group_size: int = 1,
+    scale: float | None = None,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Split-K flash-decoding over a KV cache (kernels/decode.py).
+
+    q: (B, Hq, q_len, d) with q_len small (1, or a short speculative
+    window); k, v: (B, Hkv, S, d) cache; ``lengths``: (B,) live token
+    counts — the kernel grid only streams ``ceil(length/block_k)`` KV
+    blocks per slot (None ⇒ all S live).
+
+    Distr fused-K̂ variant: pass ``k_fused`` (B, Hkv, S, d/G*), the layer's
+    static ``perm`` (Hkv, d) and ``group_size`` — the score stage streams
+    the narrow fused cache (column-sampled Q), the value stage full V; raw
+    ``k`` may be None (it stays cold on the serve path).  ``scale`` always
+    refers to the full head dim (default 1/√d).  ``interpret=None``
+    auto-detects the backend like every other op here.
+    """
+    d = v.shape[-1]
+    q_len = q.shape[2]
+    scale = float(scale) if scale is not None else 1.0 / (d ** 0.5)
+    if interpret is None:
+        interpret = default_interpret()
+    if k_fused is not None:
+        if perm is None or group_size <= 1:
+            raise ValueError("k_fused needs perm and group_size > 1")
+        lengths = _decode_lengths(lengths, q.shape[0], k_fused.shape[2])
+        return _decode_attention_fused_jit(
+            q, k_fused, v, perm, lengths, group_size, scale, block_k, q_len,
+            interpret,
+        )
+    lengths = _decode_lengths(lengths, q.shape[0], k.shape[2])
+    return _decode_attention_jit(
+        q, k, v, lengths, scale, block_k, q_len, interpret
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -358,7 +485,7 @@ def ssd(
 ) -> jnp.ndarray:
     """Mamba-2 SSD.  x: (B,N,H,P); a: (B,N,H); b,c: (B,N,G,S)."""
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     return _ssd_jit(x, a, b, c, chunk, interpret)
 
 
@@ -425,11 +552,10 @@ def attention_cost(
         + 4 * b * hq * nk * d  # K, V read in both kernels
         + 4 * b * hq * n * d  # dO read ×2 kernels + O + dO reads (delta)
     ) + 4 * (
-        # LSE + D modeled as per-row f32 scalars: one write each (fwd kernel /
+        # LSE + D are per-row f32 scalars in HBM: one write each (fwd kernel /
         # delta kernel) + one read each in both backward kernels = 6n.  The
-        # current implementation lane-replicates them ×STATS_LANES in HBM
-        # (DESIGN.md §Backward) — a known constant-factor overhead the model
-        # deliberately idealises away.
+        # implementation matches (kernels store (BHq, N) f32 and re-broadcast
+        # in-kernel, DESIGN.md §Backward) — no lane-replication factor.
         6 * b * hq * n
         + b * hq * n * d  # dQ write, f32
         + 2 * b * hq * nk * d  # per-q-head dK, dV writes, f32

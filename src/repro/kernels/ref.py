@@ -43,6 +43,32 @@ def distr_attention_ref(
     return distr_attention(q, k, v, cfg, causal=causal, scale=scale)
 
 
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray | None = None,
+    *,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Oracle for kernels/decode.py (q_len == 1 decode).
+
+    q: (B, Hq, 1, d); k, v: (B, Hkv, S, d); lengths: (B,) live token counts
+    (None ⇒ all S live).  The fused-K̂ variant shares this oracle: pass the
+    fused cache as ``k`` and pre-sampled queries as ``q`` with the full-d
+    scale (the kernel computes exactly this masked softmax either way).
+    """
+    kv_mask = (
+        jnp.arange(k.shape[2])[None, :] < lengths[:, None]
+        if lengths is not None
+        else None
+    )
+    return reference_attention(
+        q, k.astype(q.dtype), v.astype(q.dtype),
+        causal=False, scale=scale, kv_mask=kv_mask,
+    )
+
+
 def ssd_ref(
     x: jnp.ndarray,
     a: jnp.ndarray,

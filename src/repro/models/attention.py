@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import AttentionConfig, attend
+from repro.core.api import AttentionConfig, attend, attend_decode
 from repro.core.distr_attention import distr_attention
 from repro.core.flash_reference import reference_attention
 from repro.models import layers
@@ -119,13 +119,25 @@ def _as_pos_vector(cache_index, b: int) -> jnp.ndarray:
 
 
 def cache_insert(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
-    """Insert per-batch rows at per-batch positions.
+    """Insert per-batch rows at per-batch positions (ring layout).
 
-    cache: (B, H, S, d); new: (B, H, 1, d); pos: (B,) int32.
+    cache: (B, H, S, d); new: (B, H, 1, d); pos: (B,) int32.  Positions are
+    absolute; the write slot is ``pos mod S`` — past ``S`` tokens the ring
+    wraps and the oldest entries are overwritten (serve.kv_cache ring
+    invariants; the engine finishes sequences before wrap by default).
     """
+    s = cache.shape[2]
     return jax.vmap(
-        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p % s, 0))
     )(cache, new.astype(cache.dtype), pos)
+
+
+def _live_lengths(length, pos: jnp.ndarray, max_len: int) -> jnp.ndarray:
+    """Per-slot live token counts for the decode kernels: the caller-tracked
+    total (serve cache ``length``) when given, else derived from the write
+    position; always clamped to the ring capacity."""
+    total = length if length is not None else pos + 1
+    return jnp.minimum(jnp.asarray(total, jnp.int32), max_len)
 
 
 def attention_decode_fused(
@@ -138,11 +150,14 @@ def attention_decode_fused(
     cache_k_fused: jnp.ndarray,
     perm: jnp.ndarray,  # (Hkv, dh) static permutation for this layer
     cache_index: jnp.ndarray,
+    length: jnp.ndarray | None = None,
 ):
     """Beyond-paper decode: scores read the fused K̂ cache (d/G* columns per
     token) instead of K — (1-1/G*)·½ fewer KV bytes on the memory-bound
-    decode path.  K is still written (for re-scoring/eviction) but stays
-    cold.  See serve.kv_cache / benchmarks/distr_decode.py."""
+    decode path, on top of the split-K kernel's live-length grid
+    (``core.api.attend_decode`` → ``kernels.ops.decode_attention``).  K is
+    still written (for re-scoring/eviction) but stays cold.  See
+    serve.kv_cache / benchmarks/distr_decode.py."""
     from repro.serve import kv_cache as kvc
 
     b, n, _ = x.shape  # n == 1
@@ -160,15 +175,13 @@ def attention_decode_fused(
     k_f_new = kvc.fuse_new_k(k, perm, g)
     cache_k_fused = cache_insert(cache_k_fused, k_f_new, pos)
 
-    q_per_kv = cfg.n_heads // cfg.n_kv_heads
-    q_s = kvc.sample_q(q, perm, g, q_per_kv)  # (B, Hq, 1, dh/g)
     scale = 1.0 / (cfg.head_dim_**0.5)
-    kv_mask = jnp.arange(cache_k_fused.shape[2])[None, :] <= pos[:, None]
-    o = reference_attention(
-        q_s, cache_k_fused.astype(q_s.dtype), cache_v.astype(q_s.dtype),
-        causal=False, scale=scale, kv_mask=kv_mask,
+    lengths = _live_lengths(length, pos, cache_k_fused.shape[2])
+    o = attend_decode(
+        q, None, cache_v, cfg.attention, lengths=lengths,
+        k_fused=cache_k_fused, perm=perm, group_size=g, scale=scale,
     )
-    out = layers.linear_apply(params["wo"], _merge_heads(o))
+    out = layers.linear_apply(params["wo"], _merge_heads(o.astype(x.dtype)))
     return out, (cache_k, cache_v, cache_k_fused)
 
 
@@ -182,13 +195,16 @@ def attention_decode_apply(
     cache_index: jnp.ndarray,
     is_cross: bool = False,
     cross_len: jnp.ndarray | None = None,
+    length: jnp.ndarray | None = None,
 ):
-    """One-token decode against a (B, Hkv, S, dh) cache.
+    """One-token decode against a (B, Hkv, S, dh) ring cache.
 
     Self-attention inserts the new K/V at per-slot ``cache_index``;
-    cross-attention reads a prefilled cache.  Decode uses the exact path —
-    the paper applies DistrAttention to the prefill/score stage; see
-    serve.kv_cache for the beyond-paper fused-K̂ decode cache.
+    cross-attention reads a prefilled cache.  The score/value stages run on
+    the split-K flash-decoding kernel via ``core.api.attend_decode`` (exact
+    attention — the paper applies DistrAttention to the prefill/score
+    stage; see serve.kv_cache for the beyond-paper fused-K̂ decode cache),
+    visiting only the ``length`` live KV blocks per slot.
     """
     b, n, _ = x.shape  # n == 1
     pos = _as_pos_vector(cache_index, b)
@@ -197,10 +213,10 @@ def attention_decode_apply(
         q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
 
     if is_cross:
-        kv_mask = (
-            jnp.arange(cache_k.shape[2])[None, :] < cross_len[:, None]
+        lengths = (
+            jnp.minimum(cross_len, cache_k.shape[2])
             if cross_len is not None
-            else None
+            else jnp.full((b,), cache_k.shape[2], jnp.int32)
         )
     else:
         k = _split_heads(layers.linear_apply(params["wk"], x), cfg.n_kv_heads)
@@ -209,13 +225,10 @@ def attention_decode_apply(
             k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
         cache_k = cache_insert(cache_k, k, pos)
         cache_v = cache_insert(cache_v, v, pos)
-        kv_mask = jnp.arange(cache_k.shape[2])[None, :] <= pos[:, None]
+        lengths = _live_lengths(length, pos, cache_k.shape[2])
 
-    o = reference_attention(
-        q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
-        causal=False, kv_mask=kv_mask,
-    )
-    out = layers.linear_apply(params["wo"], _merge_heads(o))
+    o = attend_decode(q, cache_k, cache_v, cfg.attention, lengths=lengths)
+    out = layers.linear_apply(params["wo"], _merge_heads(o.astype(x.dtype)))
     return out, (cache_k, cache_v)
 
 

@@ -154,8 +154,11 @@ def block_decode_apply(
     cache: dict,
     cache_index,
     cross_len=None,
+    length=None,
 ):
-    """One-token decode.  cache is a per-layer dict (see serve.kv_cache)."""
+    """One-token decode.  cache is a per-layer dict (see serve.kv_cache);
+    ``length`` is the per-slot live token count incl. the new token (None →
+    derived from cache_index) — it bounds the decode kernel's KV walk."""
     if layer_type == "mamba":
         y, (conv_s, ssm_s) = mamba.mamba_decode_apply(
             params["mixer"], norm_apply(params["norm1"], x, cfg), cfg,
@@ -175,6 +178,7 @@ def block_decode_apply(
         o, (ck, cv) = attn_mod.attention_decode_apply(
             params["attn"], h, cfg,
             cache_k=cache["k"], cache_v=cache["v"], cache_index=cache_index,
+            length=length,
         )
         new_cache = {**cache, "k": ck, "v": cv}
     x = x + o

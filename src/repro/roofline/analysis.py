@@ -378,6 +378,69 @@ def roofline(compiled) -> RooflineTerms:
 
 
 # ---------------------------------------------------------------------------
+# Flash-decoding analytic cost model (kernels/decode.py)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_cost(
+    b: int,
+    hq: int,
+    hkv: int,
+    length: int,
+    max_len: int,
+    d: int,
+    *,
+    group_size: int = 1,
+    block_k: int = 128,
+    q_len: int = 1,
+) -> dict:
+    """FLOPs / bytes model of one split-K decode step (per layer).
+
+    The length-aware grid streams only ``ceil(length/block_k)`` KV blocks
+    per slot — per-token KV traffic scales with the *live* length, not the
+    allocated ``max_len`` (whose cost is reported as ``dense_kv_bytes`` for
+    comparison: the pre-kernel serve path attended over the whole padded
+    cache).  The fused-K̂ variant (``group_size > 1``) reads the ``d/G*``-
+    wide fused cache in the score stage and full V in the value stage: the
+    paper's (1 − 1/G*)·½ KV-read saving on top of the live-length win.
+    Split partials (o, m, l per split, f32) are the flash-decoding merge
+    overhead — counted as one write + one read each over *all*
+    ``max_len/block_k`` splits: jit shapes are static, so dead splits still
+    zero-write their partials and the XLA merge streams every split (only
+    the KV stream itself is length-bounded).
+    """
+    block_k = min(block_k, max_len)
+    live = min(max(length, 1), max_len)
+    nk_live = -(-live // block_k) * block_k  # KV blocks actually streamed
+    splits_total = -(-max_len // block_k)  # partial buffers are full-size
+    d_score = d // group_size
+    w = 2  # bf16 cache / activations
+    rows = b * hq * q_len
+
+    kv_bytes = w * b * hkv * nk_live * (d_score + d)  # K (or K̂) + V streams
+    # Pre-kernel baseline: the masked-scan path streams the same caches
+    # (K̂ + V when fused, K + V otherwise) but over all max_len slots.
+    dense_kv_bytes = w * b * hkv * max_len * (d_score + d)
+    q_bytes = w * rows * d_score
+    o_bytes = w * rows * d
+    partial_bytes = 2 * 4 * b * hq * q_len * splits_total * (d + 2)
+
+    qk_flops = 2 * rows * nk_live * d_score
+    pv_flops = 2 * rows * nk_live * d
+    softmax_flops = 4 * rows * nk_live
+    merge_flops = 4 * rows * splits_total * (d + 2)
+
+    return {
+        "kv_bytes": kv_bytes,
+        "dense_kv_bytes": dense_kv_bytes,
+        "hbm_bytes": kv_bytes + q_bytes + o_bytes + partial_bytes,
+        "mxu_flops": qk_flops + pv_flops,
+        "total_flops": qk_flops + pv_flops + softmax_flops + merge_flops,
+        "splits_live": nk_live // block_k,
+    }
+
+
+# ---------------------------------------------------------------------------
 # MODEL_FLOPS (6·N·D convention)
 # ---------------------------------------------------------------------------
 

@@ -100,6 +100,11 @@ class ServeEngine:
                                        self._slot_axis(key))
                 for key in self.cache
             }
+            if "length" in self.cache:
+                # Bucketed prefill right-pads the prompt; only the true n
+                # tokens are live — every decode step's KV walk (and the
+                # kernel grid) is bounded by this, not by max_len.
+                self.cache["length"] = self.cache["length"].at[slot].set(n)
             self.pos = self.pos.at[slot].set(n - 1)
             self.tokens = self.tokens.at[slot, 0].set(req.prompt[-1])
             self.active[slot] = req
@@ -107,7 +112,7 @@ class ServeEngine:
     @staticmethod
     def _slot_axis(key: str) -> int:
         """Batch/slot axis per cache layout (serve.kv_cache docstring)."""
-        if key == "cross_len":
+        if key in ("cross_len", "length"):
             return 0
         if key.startswith("groups_"):
             return 2  # (G, per_group, B, ...)
@@ -132,8 +137,14 @@ class ServeEngine:
         self._admit()
         if not self.active:
             return []
-        # advance positions: decode writes at pos+1 (pos = last filled index)
-        step_pos = self.pos + 1
+        # advance positions: decode writes at pos+1 (pos = last filled index).
+        # Idle slots stay pinned at 0 so their garbage decode keeps walking
+        # one KV block instead of growing back toward max_len (serve_step
+        # stores length = max(length, pos+1)).
+        occupied = np.zeros((self.max_slots,), bool)
+        for s in self.active:
+            occupied[s] = True
+        step_pos = jnp.where(jnp.asarray(occupied), self.pos + 1, 0)
         self._rng, sub = jax.random.split(self._rng)
         logits, self.cache = self._decode(
             self.params, self.tokens, self.cache, step_pos
@@ -155,6 +166,11 @@ class ServeEngine:
                 done_now.append(req)
                 self.finished.append(req)
                 del self.active[slot]
+                # Reset the freed slot so its (garbage) decode walks one KV
+                # block, not the dead sequence's full live window.
+                self.pos = self.pos.at[slot].set(0)
+                if "length" in self.cache:
+                    self.cache["length"] = self.cache["length"].at[slot].set(0)
         return done_now
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:

@@ -2,11 +2,23 @@
 DistrAttention decode cache.
 
 Layouts (L = layers, B = slots, S = max_len):
-  dense/moe (GQA): k, v            (L, B, Hkv, S, dh)
+  dense/moe (GQA): k, v            (L, B, Hkv, S, dh) + length (B,)
   mla:             ckv             (L, B, S, kv_lora), krope (L, B, S, rope_d)
   ssm:             conv            (L, B, k-1, conv_dim), ssm (L, B, H, S, P)
   hybrid:          groups_* (G, per-group stacks) + shared_k/v per group site
   encdec:          k, v + cross_k, cross_v (L, B, Hkv, enc_len, dh)
+
+Ring layout (GQA serve path, DESIGN.md §Decode): the S axis is a ring —
+writes land at ``pos mod S`` (``models.attention.cache_insert``) and the
+per-slot ``length`` tracks the *total* tokens ever written, so the live
+window is the most recent ``min(length, S)`` tokens.  Invariants:
+
+  * length ≤ S ⇒ slots ``0..length-1`` are live, tail ``length..S-1`` dead —
+    the decode kernel's grid visits only ``ceil(length/block_k)`` KV blocks
+    and masks the part-filled tail block (kernels/decode.py);
+  * length > S ⇒ every slot is live (the ring has wrapped; oldest tokens
+    were overwritten);
+  * RoPE positions stay absolute — only the storage slot wraps.
 
 Fused decode cache (``AttentionConfig.distr_decode``): for GQA archs the K
 cache additionally stores K̂ = fuse(K, perm_static) with a *static* per-layer
@@ -75,6 +87,9 @@ def cache_struct(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
     cache = {
         "k": f((l, batch, hkv, max_len, dh), dtype),
         "v": f((l, batch, hkv, max_len, dh), dtype),
+        # Total tokens written per slot (ring: live window = min(length, S)).
+        # The decode kernels bound their KV walk by it instead of max_len.
+        "length": f((batch,), jnp.int32),
     }
     if cfg.attention.distr_decode:
         g = cfg.attention.distr.group_size
@@ -186,11 +201,9 @@ def sample_q(q: jnp.ndarray, perm: jnp.ndarray, group_size: int,
              q_per_kv: int) -> jnp.ndarray:
     """Sample Q columns under the per-kv-head static permutation.
 
-    q: (B, Hq, 1, dh); perm: (Hkv, dh) → (B, Hq, 1, dh/g).
+    q: (B, Hq, 1, dh); perm: (Hkv, dh) → (B, Hq, 1, dh/g).  Thin alias of
+    ``core.grouping.sample_q_heads`` (the single implementation shared with
+    the decode-kernel wrapper and the reference dispatch).
     """
-    b, hq, n, dh = q.shape
-    hkv = perm.shape[0]
-    qg = q.reshape(b, hkv, q_per_kv, n, dh)
-    idx = grouping.sampled_indices(perm, group_size)  # (Hkv, dh/g)
-    out = jnp.take_along_axis(qg, idx[None, :, None, None, :], axis=-1)
-    return out.reshape(b, hq, n, dh // group_size)
+    del q_per_kv  # implied by q/perm head counts
+    return grouping.sample_q_heads(q, perm, group_size)

@@ -53,6 +53,11 @@ def make_prefill(cfg, max_len: int):
             k, v = parts["kv"]  # (L, B, Hkv, S, dh)
             cache["k"] = _pad_seq_to(k.astype(dtype), max_len, 3)
             cache["v"] = _pad_seq_to(v.astype(dtype), max_len, 3)
+            # Per-slot live length: the whole prompt is live after prefill.
+            # The engine overrides this for right-padded prompts.
+            cache["length"] = jnp.full(
+                (tokens.shape[0],), k.shape[3], jnp.int32
+            )
             if cfg.attention.distr_decode:
                 from repro.core import grouping
 
@@ -128,6 +133,13 @@ def make_decode_step(cfg):
 
         if cfg.family in ("dense", "moe") and not cfg.use_mla:
             new_cache = dict(cache)
+            max_len = cache["k"].shape[3]
+            # Length-aware decode: the total token count (incl. the token
+            # being decoded) bounds every layer's KV walk — the kernels
+            # stream ceil(length/block_k) blocks, not max_len.
+            total = jnp.maximum(cache["length"], pos + 1)
+            length = jnp.minimum(total, max_len)
+            new_cache["length"] = total
             if cfg.family == "moe" and cfg.first_dense_layers:
                 fd = cfg.first_dense_layers
 
@@ -136,6 +148,7 @@ def make_decode_step(cfg):
                     h, nc = transformer.block_decode_apply(
                         lp, h, cfg, "dense",
                         cache={"k": k_l, "v": v_l}, cache_index=pos,
+                        length=length,
                     )
                     return h, (nc["k"], nc["v"])
 
@@ -150,6 +163,7 @@ def make_decode_step(cfg):
                     h, nc = transformer.block_decode_apply(
                         lp, h, cfg, layer_type,
                         cache={"k": k_l, "v": v_l}, cache_index=pos,
+                        length=length,
                     )
                     return h, (nc["k"], nc["v"])
 
@@ -176,7 +190,7 @@ def make_decode_step(cfg):
                     o, (_, v2, kf2) = attention_decode_fused(
                         lp["attn"], hn, cfg,
                         cache_k=None, cache_v=v_l, cache_k_fused=kf_l,
-                        perm=perm_l, cache_index=pos,
+                        perm=perm_l, cache_index=pos, length=length,
                     )
                     h = h + o
                     h2 = norm_apply(lp["norm2"], h, cfg)
@@ -196,6 +210,7 @@ def make_decode_step(cfg):
                     h, nc = transformer.block_decode_apply(
                         lp, h, cfg, layer_type,
                         cache={"k": k_l, "v": v_l}, cache_index=pos,
+                        length=length,
                     )
                     return h, (nc["k"], nc["v"])
 

@@ -30,3 +30,14 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Tier-1 (`pytest -x -q`) skips slow tests (multi-step engine decodes);
+    an explicit marker expression (`pytest -m slow`) still runs them."""
+    if config.getoption("-m"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: opt in with -m slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
