@@ -40,11 +40,11 @@ def _fwd_bwd(attn_fn):
     return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows, records = [], []
     block = 64
     for d in (64,):
-        for n in (128, 256):
+        for n in ((128,) if smoke else (128, 256)):
             ks = jax.random.split(jax.random.PRNGKey(0), 3)
             q = jax.random.normal(ks[0], (B, H, n, d), jnp.float32)
             k = jax.random.normal(ks[1], (B, H, n, d), jnp.float32)
@@ -79,7 +79,7 @@ def run() -> list[tuple]:
             ))
 
             # --- distr: checkpoint-scan core path vs kernel custom_vjp.
-            for g in (2, 4):
+            for g in ((2,) if smoke else (2, 4)):
                 cfg = DistrConfig(group_size=g, block_q=block, block_k=block)
                 t_core = timeit(
                     _fwd_bwd(functools.partial(core_distr, cfg=cfg, causal=True)),
@@ -107,9 +107,10 @@ def run() -> list[tuple]:
                     f"scan={t_core:.0f}us mxu_ratio={ratio:.3f} {timing_label()}",
                 ))
 
-    save_result("attention_bwd", records)
-    with open(os.path.abspath(BENCH_PATH), "w") as f:
-        json.dump(records, f, indent=1)
+    if not smoke:
+        save_result("attention_bwd", records)
+        with open(os.path.abspath(BENCH_PATH), "w") as f:
+            json.dump(records, f, indent=1)
     return rows
 
 

@@ -1,0 +1,121 @@
+"""Tuned-vs-default block sizes, measured (the autotuner acceptance row).
+
+For every (kernel, shape) row the tuner sweeps the analytic top-K candidate
+set *plus the 128×128 default* in one measurement pass and picks the argmin
+— so the tuned configuration's throughput is ≥ the default's on the same
+axis by construction, and the interesting signal is the margin and where
+the pick lands (the analytic model already predicts non-128 tiles at d=64
+and G*=4).  Timings carry ``backend``/``interpret`` labels like every other
+bench: on this container they are Pallas-interpreter (or XLA-CPU) wall
+times, not TPU times — the *ranking* inside one row is the claim, not the
+absolute numbers.
+
+Emits ``BENCH_autotune.json`` at the repo root and
+``benchmarks/results/autotune.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+from repro.tune import Autotuner, TuneCache, cache_key, wall_timer
+from repro.tune.autotune import _backend_tag, _default_interpret
+from benchmarks.common import backend_info, save_result, timing_label
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_autotune.json")
+
+# (kernel, d, n, group_size, causal)
+ROWS = [
+    ("flash_fwd", 64, 512, 1, True),
+    ("flash_fwd", 128, 256, 1, True),
+    ("flash_dq", 64, 256, 1, True),
+    ("flash_dkv", 64, 256, 1, True),
+    ("xla_flash", 64, 512, 1, True),
+    ("distr_fwd", 128, 256, 4, True),
+    ("decode", 64, 512, 1, False),
+    ("decode", 128, 512, 4, False),
+]
+SMOKE_ROWS = [
+    ("flash_fwd", 64, 128, 1, True),
+    ("decode", 64, 128, 1, False),
+]
+
+
+def _measure_row(tuner: Autotuner, kernel, d, n, g, causal, interpret):
+    """Resolve one key in measure mode and pull the per-candidate table out
+    of the cache entry (default and tuned timings come from the SAME pass)."""
+    if kernel == "decode":
+        tuned = tuner.resolve_decode(d=d, n=n, group_size=g, dtype="float32")
+        key = cache_key(
+            "decode", backend=_backend_tag(interpret), dtype="float32", d=d,
+            group_size=g, n=tuner._measure_seq(n, interpret), causal=False,
+        )
+    else:
+        tuned = tuner.resolve_pair(
+            kernel, d=d, n=n, group_size=g, causal=causal, dtype="float32"
+        )
+        key = cache_key(
+            kernel, backend=_backend_tag(interpret), dtype="float32", d=d,
+            group_size=g, n=tuner._measure_seq(n, interpret), causal=causal,
+        )
+    entry = tuner.cache.get(key)
+    table = {
+        tuple(r["candidate"]) if isinstance(r["candidate"], list)
+        else r["candidate"]: r["seconds"]
+        for r in entry["table"]
+    }
+    default = (128, 128) if kernel != "decode" else min(128, n)
+    default_s = table.get(default)
+    tuned_key = tuple(tuned) if isinstance(tuned, tuple) else tuned
+    tuned_s = table[tuned_key]
+    return tuned, tuned_s, default, default_s, entry["table"]
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    rows_out, records = [], []
+    prev = os.environ.get("REPRO_TUNE")
+    os.environ["REPRO_TUNE"] = "measure"
+    interpret = _default_interpret()
+    try:
+        with tempfile.TemporaryDirectory() as tmp:
+            # Fresh cache: every run re-measures on the current backend.
+            tuner = Autotuner(
+                cache=TuneCache(os.path.join(tmp, "tune.json")),
+                timer=wall_timer(warmup=1, iters=2 if smoke else 3),
+                top_k=3 if smoke else 8,
+            )
+            for kernel, d, n, g, causal in (SMOKE_ROWS if smoke else ROWS):
+                tuned, tuned_s, default, default_s, table = _measure_row(
+                    tuner, kernel, d, n, g, causal, interpret
+                )
+                # default_s is None only if the 128-default itself failed to
+                # run (measure_candidates skips broken candidates).
+                speedup = (default_s / tuned_s) if default_s else float("nan")
+                default_us = default_s * 1e6 if default_s else float("nan")
+                rec = dict(
+                    kernel=kernel, d=d, n=n, group_size=g, causal=causal,
+                    tuned_blocks=tuned, tuned_us=tuned_s * 1e6,
+                    default_blocks=default,
+                    default_us=default_s * 1e6 if default_s else None,
+                    speedup_vs_default=speedup,
+                    table=table,
+                    **backend_info(interpret),
+                )
+                records.append(rec)
+                rows_out.append((
+                    f"autotune/{kernel}/d={d}/n={n}/g={g}",
+                    tuned_s * 1e6,
+                    f"tuned={tuned} default_us={default_us:.0f} "
+                    f"speedup={speedup:.2f}x {timing_label(interpret)}",
+                ))
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_TUNE", None)
+        else:
+            os.environ["REPRO_TUNE"] = prev
+    if not smoke:
+        save_result("autotune", records)
+        with open(os.path.abspath(BENCH_PATH), "w") as f:
+            json.dump(records, f, indent=1)
+    return rows_out

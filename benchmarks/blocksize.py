@@ -1,31 +1,90 @@
-"""Paper Table 2: (l, m) selection — analytic rule vs exhaustive best,
-re-parameterised for TPU VMEM (DESIGN.md §2)."""
+"""Paper Table 2: (l, m) selection — analytic rule vs measured best vs the
+static 128×128 default, on the same measured axis.
+
+The candidate grid is sourced from ``core.block_size.enumerate_block_sizes``
+via the autotuner's pruner (``repro.tune.pair_candidates``) — the benchmark
+and the tuner search the *same* space, so a disagreement between the
+analytic pick and the measured best here is exactly the gap the
+``REPRO_TUNE=measure`` mode closes.  Timings are labeled by
+backend/interpret (CPU interpreter wall time is not TPU time; the analytic
+VMEM/IO story lives in DESIGN.md §2)."""
 from __future__ import annotations
 
-from repro.core.block_size import enumerate_block_sizes, select_block_sizes
-from benchmarks.common import save_result
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_size import select_block_sizes
+from repro.kernels import ops
+from repro.tune import pair_candidates, seq_bucket
+from repro.tune.measure import measure_candidates, wall_timer
+from benchmarks.common import backend_info, save_result, timing_label
+
+N = 512
 
 
-def run() -> list[tuple]:
+def _measure(d: int, g: int, n: int, candidates, iters: int):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, n, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, n, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, n, d), jnp.float32)
+
+    def make_run(cand):
+        bq, bk = cand
+        if g > 1:
+            from repro.core.distr_attention import DistrConfig
+
+            cfg = DistrConfig(group_size=g, block_q=bq, block_k=bk)
+            return lambda: ops.distr_attention(q, k, v, cfg, causal=True)
+        return lambda: ops.flash_attention(
+            q, k, v, causal=True, block_q=bq, block_k=bk
+        )
+
+    return measure_candidates(
+        make_run, candidates, wall_timer(warmup=1, iters=iters)
+    )
+
+
+def run(smoke: bool = False) -> list[tuple]:
     rows, records = [], []
-    for d in (32, 64, 128, 256):
-        for g in (1, 2):
-            # extend the search past 1024 so the VMEM constraint binds —
-            # TPU VMEM (16 MiB) is ~100× GPU SMEM, so optimal TPU tiles are
-            # far larger than the paper's (128, 128) (DESIGN.md §2).
-            ours = select_block_sizes(d, group_size=g, max_l=4096, max_m=4096)
-            legal = enumerate_block_sizes(d, group_size=g, max_l=4096,
-                                          max_m=4096)
-            # "best" = the config the selection rule ranks first among legal
-            # (on hardware this would be a measured sweep; structurally the
-            # rule's objective is max-l-then-m, so report the frontier too)
-            max_l = max(x[0] for x in legal)
-            best = (max_l, max(m for l, m, _ in legal if l == max_l))
-            records.append(dict(d=d, g=g, ours=ours, best=best,
-                                n_legal=len(legal)))
-            rows.append((
-                f"blocksize/d={d}/G={g}", 0.0,
-                f"ours={ours} best={best} legal={len(legal)}",
-            ))
-    save_result("blocksize", records)
+    n = 128 if smoke else N
+    configs = [(64, 1)] if smoke else [(d, g) for d in (32, 64, 128, 256)
+                                       for g in (1, 2)]
+    for d, g in configs:
+        # Shared search space: the tuner's analytic pruning over the full
+        # enumerate_block_sizes grid, clamped to this sequence bucket.
+        candidates = pair_candidates(d, n=n, group_size=g,
+                                     top_k=3 if smoke else 8)
+        nb = seq_bucket(n)
+        analytic = select_block_sizes(d, group_size=g, max_l=nb, max_m=nb)
+        analytic = (min(analytic[0], nb), min(analytic[1], nb))
+        if analytic not in candidates:
+            candidates.append(analytic)
+        default = (min(128, nb), min(128, nb))
+
+        table = _measure(d, g, n, candidates, iters=2 if smoke else 3)
+        best = min(table, key=lambda c: table[c])
+
+        def us(cand):
+            # measure_candidates skips candidates that fail to run; a
+            # missing analytic/default row reports NaN instead of crashing.
+            s = table.get(cand)
+            return s * 1e6 if s is not None else float("nan")
+
+        rec = dict(
+            d=d, g=g, n=n,
+            candidates=[list(c) for c in candidates],
+            analytic=list(analytic), analytic_us=us(analytic),
+            measured_best=list(best), measured_best_us=us(best),
+            default=list(default), default_us=us(default),
+            **backend_info(),
+        )
+        records.append(rec)
+        rows.append((
+            f"blocksize/d={d}/G={g}", us(best),
+            f"best={best} analytic={analytic}({us(analytic):.0f}us) "
+            f"default={default}({us(default):.0f}us) "
+            f"{timing_label()}",
+        ))
+    if not smoke:
+        save_result("blocksize", records)
     return rows

@@ -21,13 +21,14 @@ from benchmarks.common import save_result, timeit
 B, H, N, D = 2, 8, 1024, 64
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
+    n = 256 if smoke else N
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     # mildly correlated activations (more realistic than iid)
-    base = jax.random.normal(ks[0], (B, H, N, D))
-    q = base + 0.5 * jax.random.normal(ks[1], (B, H, N, D))
-    k = base + 0.5 * jax.random.normal(ks[2], (B, H, N, D))
-    v = jax.random.normal(jax.random.PRNGKey(3), (B, H, N, D))
+    base = jax.random.normal(ks[0], (B, H, n, D))
+    q = base + 0.5 * jax.random.normal(ks[1], (B, H, n, D))
+    k = base + 0.5 * jax.random.normal(ks[2], (B, H, n, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, H, n, D))
 
     exact = reference_attention(q, k, v, causal=True)
 
@@ -55,8 +56,9 @@ def run() -> list[tuple]:
             jnp.sum(out.astype(jnp.float32) * exact)
             / (jnp.linalg.norm(out.astype(jnp.float32)) * jnp.linalg.norm(exact))
         )
-        us = timeit(fn, q, k, v, warmup=1, iters=3)
+        us = timeit(fn, q, k, v, warmup=1, iters=2 if smoke else 3)
         records.append(dict(method=name, rel_err=rel, cosine=cos, us=us))
         rows.append((f"compare/{name}", us, f"rel_err={rel:.4f} cos={cos:.4f}"))
-    save_result("compare", records)
+    if not smoke:
+        save_result("compare", records)
     return rows

@@ -36,12 +36,14 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
 _dense_decode = ref.decode_attention_ref
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows, records = [], []
+    max_len = 128 if smoke else MAX_LEN
+    live_lengths = (64, 128) if smoke else LIVE_LENGTHS
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (B, HQ, 1, D), jnp.float32)
-    k = jax.random.normal(ks[1], (B, HKV, MAX_LEN, D), jnp.float32)
-    v = jax.random.normal(ks[2], (B, HKV, MAX_LEN, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, HKV, max_len, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, HKV, max_len, D), jnp.float32)
 
     kernel_fn = jax.jit(
         lambda q, k, v, lens: ops.decode_attention(
@@ -50,18 +52,18 @@ def run() -> list[tuple]:
     )
     dense_fn = jax.jit(_dense_decode)
 
-    for live in LIVE_LENGTHS:
+    for live in live_lengths:
         lens = jnp.full((B,), live, jnp.int32)
         t_kernel = timeit(kernel_fn, q, k, v, lens)
         t_dense = timeit(dense_fn, q, k, v, lens)
 
         cost = decode_attention_cost(
-            B, HQ, HKV, live, MAX_LEN, D, block_k=BLOCK_K
+            B, HQ, HKV, live, max_len, D, block_k=BLOCK_K
         )
         # tokens/s for the whole batch at the measured per-step latency
         tokens_per_s = B / (t_kernel * 1e-6)
         rec = dict(
-            live_length=live, max_len=MAX_LEN, block_k=BLOCK_K,
+            live_length=live, max_len=max_len, block_k=BLOCK_K,
             b=B, hq=HQ, hkv=HKV, d=D,
             kernel_us=t_kernel, dense_us=t_dense,
             tokens_per_s=tokens_per_s,
@@ -80,19 +82,22 @@ def run() -> list[tuple]:
 
     # The acceptance ratio, recorded explicitly: live-length scaling in the
     # cost model (length=64 vs length=512 at the same max_len).
-    c64 = decode_attention_cost(B, HQ, HKV, 64, MAX_LEN, D, block_k=BLOCK_K)
-    c512 = decode_attention_cost(B, HQ, HKV, 512, MAX_LEN, D, block_k=BLOCK_K)
+    c64 = decode_attention_cost(B, HQ, HKV, 64, max_len, D, block_k=BLOCK_K)
+    c512 = decode_attention_cost(B, HQ, HKV, max_len, max_len, D,
+                                 block_k=BLOCK_K)
     ratio = c512["kv_bytes"] / c64["kv_bytes"]
     records.append(dict(
         kind="kv_scaling", kv_bytes_ratio_512_vs_64=ratio, **backend_info(),
     ))
     rows.append((
-        "decode/kv_scaling", 0.0, f"kv_bytes(len=512)/kv_bytes(len=64)={ratio:.1f}x"
+        "decode/kv_scaling", 0.0,
+        f"kv_bytes(len={max_len})/kv_bytes(len=64)={ratio:.1f}x",
     ))
 
-    save_result("decode", records)
-    with open(os.path.abspath(BENCH_PATH), "w") as f:
-        json.dump(records, f, indent=1)
+    if not smoke:
+        save_result("decode", records)
+        with open(os.path.abspath(BENCH_PATH), "w") as f:
+            json.dump(records, f, indent=1)
     return rows
 
 

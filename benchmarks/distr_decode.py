@@ -27,11 +27,13 @@ BLOCK_K = 64
 LIVE_LENGTHS = (64, 256, 512)
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows, records = [], []
+    max_len = 128 if smoke else MAX_LEN
+    live_lengths = (64,) if smoke else LIVE_LENGTHS
     cfg = get_config("qwen2.5-32b")  # full head geometry; tiny batch below
     dh, hkv, hq = cfg.head_dim_, cfg.n_kv_heads, cfg.n_heads
-    for g in (2, 4):
+    for g in ((2,) if smoke else (2, 4)):
         # bytes read per cached token per decode step (per layer, kv head):
         # exact reads K+V; fused reads K̂+V (raw K stays cold for the score
         # stage and is only touched at eviction/rescoring).
@@ -42,8 +44,8 @@ def run() -> list[tuple]:
         # fidelity + latency on gaussian K/q with a static permutation
         perms = jax.random.permutation(jax.random.PRNGKey(0), dh)[None]
         perms = jnp.broadcast_to(perms, (hkv, dh)).astype(jnp.int32)
-        k = jax.random.normal(jax.random.PRNGKey(1), (1, hkv, MAX_LEN, dh))
-        v = jax.random.normal(jax.random.PRNGKey(2), (1, hkv, MAX_LEN, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, hkv, max_len, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, hkv, max_len, dh))
         q = jax.random.normal(jax.random.PRNGKey(3), (1, hq, 1, dh))
         k_f = grouping.fuse_columns(k.astype(jnp.float32), perms[None], g)
         q_s = kv_cache.sample_q(q, perms, g, hq // hkv)
@@ -71,22 +73,22 @@ def run() -> list[tuple]:
 
         def scan_fn(q, kf, v, lens):
             q_smp = kv_cache.sample_q(q, perms, g, hq // hkv)
-            kv_mask = jnp.arange(MAX_LEN)[None, :] < lens[:, None]
+            kv_mask = jnp.arange(max_len)[None, :] < lens[:, None]
             return reference_attention(
                 q_smp, kf.astype(q_smp.dtype), v.astype(q_smp.dtype),
                 causal=False, scale=scale, kv_mask=kv_mask,
             )
 
         scan_jit = jax.jit(scan_fn)
-        for live in LIVE_LENGTHS:
+        for live in live_lengths:
             lens = jnp.full((1,), live, jnp.int32)
             t_kernel = timeit(kernel_fn, q, k_f.astype(q.dtype), v, lens)
             t_scan = timeit(scan_jit, q, k_f, v, lens)
             cost = decode_attention_cost(
-                1, hq, hkv, live, MAX_LEN, dh, group_size=g, block_k=BLOCK_K
+                1, hq, hkv, live, max_len, dh, group_size=g, block_k=BLOCK_K
             )
             records.append(dict(
-                g=g, live_length=live, max_len=MAX_LEN,
+                g=g, live_length=live, max_len=max_len,
                 kernel_us=t_kernel, scan_us=t_scan,
                 kv_bytes_per_token=cost["kv_bytes"],
                 dense_kv_bytes_per_token=cost["dense_kv_bytes"],
@@ -97,5 +99,6 @@ def run() -> list[tuple]:
                 f"scan={t_scan:.0f}us kv_bytes={cost['kv_bytes']} "
                 f"{timing_label()}",
             ))
-    save_result("distr_decode", records)
+    if not smoke:
+        save_result("distr_decode", records)
     return rows

@@ -39,13 +39,14 @@ def _one_trial(seed, cfg):
     )
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows_out, records = [], []
-    for method in ("sign_gray", "proj_morton"):
+    trials = 2 if smoke else TRIALS
+    for method in (("sign_gray",) if smoke else ("sign_gray", "proj_morton")):
         # Table 3: vary block size l at G*=2
-        for l in (1, 2, 4, 8):
+        for l in ((2,) if smoke else (1, 2, 4, 8)):
             cfg = DistrConfig(group_size=2, block_q=l, hash_method=method)
-            r = np.mean([_one_trial(s, cfg) for s in range(TRIALS)], axis=0)
+            r = np.mean([_one_trial(s, cfg) for s in range(trials)], axis=0)
             rec = dict(table="T3", method=method, l=l, g=2,
                        s_mean=r[0], s_max=r[1], o_mean=r[2], o_max=r[3])
             records.append(rec)
@@ -54,9 +55,9 @@ def run() -> list[tuple]:
                 f"S-mean={r[0]*100:.2f}% O-mean={r[2]*100:.2f}% O-max={r[3]*100:.2f}%",
             ))
         # Table 4: vary G* at l=2
-        for g in (2, 4, 8, 16):
+        for g in ((2,) if smoke else (2, 4, 8, 16)):
             cfg = DistrConfig(group_size=g, block_q=2, hash_method=method)
-            r = np.mean([_one_trial(s, cfg) for s in range(TRIALS)], axis=0)
+            r = np.mean([_one_trial(s, cfg) for s in range(trials)], axis=0)
             rec = dict(table="T4", method=method, l=2, g=g,
                        s_mean=r[0], s_max=r[1], o_mean=r[2], o_max=r[3])
             records.append(rec)
@@ -64,5 +65,6 @@ def run() -> list[tuple]:
                 f"errors/T4/{method}/G={g}", 0.0,
                 f"S-mean={r[0]*100:.2f}% O-mean={r[2]*100:.2f}% O-max={r[3]*100:.2f}%",
             ))
-    save_result("errors", records)
+    if not smoke:
+        save_result("errors", records)
     return rows_out

@@ -22,15 +22,17 @@ MAX_LEN = 512
 DECODE_LIVE = (64, 128, 256)
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows, records = [], []
     base = get_config("qwen1.5-4b", reduced=True).replace(
-        n_layers=4, compute_dtype="float32"
+        n_layers=2 if smoke else 4, compute_dtype="float32"
     )
+    max_len = 64 if smoke else MAX_LEN
+    decode_live = (32,) if smoke else DECODE_LIVE
     params = lm.init_params(jax.random.PRNGKey(0), base)
     for impl in ("xla_flash", "distr"):
         cfg = base.replace(attention=base.attention.with_impl(impl))
-        for n in (256, 512, 1024, 2048):
+        for n in ((64,) if smoke else (256, 512, 1024, 2048)):
             toks = jax.random.randint(jax.random.PRNGKey(1), (1, n), 0, cfg.vocab)
             prefill = jax.jit(make_prefill(cfg, n))
             us = timeit(prefill, params, toks, warmup=1, iters=3)
@@ -46,9 +48,9 @@ def run() -> list[tuple]:
     for impl in ("xla_flash", "reference"):
         cfg = base.replace(attention=base.attention.with_impl(impl))
         decode = jax.jit(make_decode_step(cfg))
-        prefill = jax.jit(make_prefill(cfg, MAX_LEN))
+        prefill = jax.jit(make_prefill(cfg, max_len))
         path = "kernel" if impl != "reference" else "scan"
-        for live in DECODE_LIVE:
+        for live in decode_live:
             toks = jax.random.randint(
                 jax.random.PRNGKey(2), (1, live), 0, cfg.vocab
             )
@@ -57,14 +59,15 @@ def run() -> list[tuple]:
             nxt = toks[:, -1:]
             us = timeit(decode, params, nxt, cache, pos, warmup=1, iters=3)
             records.append(dict(
-                impl=impl, kind="decode", live_length=live, max_len=MAX_LEN,
+                impl=impl, kind="decode", live_length=live, max_len=max_len,
                 us_per_token=us,
                 **backend_info(None if impl != "reference" else False),
             ))
             rows.append((
                 f"decode_tok/{path}/len={live}", us,
-                f"max_len={MAX_LEN} "
+                f"max_len={max_len} "
                 + timing_label(None if path == "kernel" else False),
             ))
-    save_result("llama_ttft", records)
+    if not smoke:
+        save_result("llama_ttft", records)
     return rows

@@ -14,11 +14,11 @@ from benchmarks.common import save_result, timeit
 D, H = 128, 4
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows, records = [], []
     cfg = DistrConfig(group_size=2, block_q=128, block_k=128)
     attn_cfg = AttentionConfig(impl="distr", distr=cfg)
-    for n in (2048, 4096, 8192):
+    for n in ((512,) if smoke else (2048, 4096, 8192)):
         q = jax.random.normal(jax.random.PRNGKey(0), (1, H, n, D), jnp.float32)
         k = jax.random.normal(jax.random.PRNGKey(1), (1, H, n, D), jnp.float32)
         v = jax.random.normal(jax.random.PRNGKey(2), (1, H, n, D), jnp.float32)
@@ -33,5 +33,6 @@ def run() -> list[tuple]:
             f"lsh_grouping/n={n}", t_group,
             f"total={t_full:.0f}us share={frac:.1f}%",
         ))
-    save_result("lsh_grouping", records)
+    if not smoke:
+        save_result("lsh_grouping", records)
     return rows

@@ -24,7 +24,7 @@ from repro.core import attend, AttentionConfig, DistrConfig
 from repro.utils.jax_compat import set_mesh
 from benchmarks.common import timeit
 
-B, H, N, D = 8, 8, 2048, 128
+B, H, N, D = 8, 8, {n}, 128
 q = jax.random.normal(jax.random.PRNGKey(0), (B, H, N, D), jnp.float32)
 k = jax.random.normal(jax.random.PRNGKey(1), (B, H, N, D), jnp.float32)
 v = jax.random.normal(jax.random.PRNGKey(2), (B, H, N, D), jnp.float32)
@@ -37,7 +37,7 @@ distr = functools.partial(
     causal=True)
 
 out = []
-for ndev in (1, 2, 4, 8):
+for ndev in {ndevs}:
     mesh = jax.sharding.Mesh(jax.devices()[:ndev], ("data",))
     sh = NamedSharding(mesh, P("data"))
     qs, ks, vs = (jax.device_put(x, sh) for x in (q, k, v))
@@ -50,9 +50,13 @@ print("JSON:" + json.dumps(out))
 """
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     src = os.path.join(os.path.dirname(__file__), "..", "src")
-    script = textwrap.dedent(_SCRIPT).format(src=os.path.abspath(src))
+    script = textwrap.dedent(_SCRIPT).format(
+        src=os.path.abspath(src),
+        n=256 if smoke else 2048,
+        ndevs=(1, 2) if smoke else (1, 2, 4, 8),
+    )
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=560)
     rows = []
@@ -60,7 +64,8 @@ def run() -> list[tuple]:
         rows.append(("multidevice/FAILED", 0.0, res.stderr[-200:]))
         return rows
     records = json.loads(res.stdout.split("JSON:")[1])
-    save_result("multidevice", records)
+    if not smoke:
+        save_result("multidevice", records)
     for r in records:
         rows.append((
             f"multidevice/devices={r['devices']}", r["distr_us"],

@@ -5,7 +5,9 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
 
   T1/Fig9  attention_time   — Flash2 vs DistrAttention compute time
   §Bwd     attention_bwd    — fwd+bwd: scan path vs kernel custom_vjp path
-  T2       blocksize        — (l, m) selection rule vs exhaustive best
+  T2       blocksize        — (l, m): analytic vs measured best vs default
+  §Tune    autotune         — tuned-vs-default blocks per kernel
+                              (BENCH_autotune.json)
   T3/T4    errors           — Ŝ error vs block size / sampling rate
   T5/T7/T8 compare          — ours vs Hydra/Flatten/Primal/Hyper fidelity+time
   T6       llama_ttft       — LM prefill TTFT, exact vs distr
@@ -15,16 +17,22 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
   extra    distr_decode     — beyond-paper fused-K̂ decode cache
   §Decode  decode           — split-K flash-decoding: tokens/s + per-token
                               KV bytes vs live length (BENCH_decode.json)
+
+``--smoke`` runs every benchmark at one tiny shape (interpret mode on this
+container) without touching the persisted JSON results — a CI-grade check
+that no benchmark has silently rotted.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
 BENCHES = [
     "errors",
     "blocksize",
+    "autotune",
     "attention_time",
     "attention_bwd",
     "compare",
@@ -41,6 +49,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help=f"subset of {BENCHES}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape pass over every benchmark; no JSON "
+                         "results are written")
     args = ap.parse_args()
     names = args.only or BENCHES
 
@@ -49,7 +60,12 @@ def main() -> None:
     for name in names:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            rows = mod.run()
+            if args.smoke:
+                if "smoke" not in inspect.signature(mod.run).parameters:
+                    raise TypeError(f"{name}.run() lacks a smoke=... param")
+                rows = mod.run(smoke=True)
+            else:
+                rows = mod.run()
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}")
             sys.stdout.flush()

@@ -25,8 +25,22 @@ import jax.numpy as jnp
 
 from repro.core.distr_attention import DistrConfig, distr_attention
 from repro.core.flash_reference import blockwise_flash_reference, reference_attention
+# Leaf imports only (no repro deps): the resolver itself is imported lazily in
+# resolve_attention_blocks to keep repro.core ↔ repro.tune import-order-free.
+from repro.tune.block_sizes import BlockSizes
+from repro.tune.cache import dtype_str as _dtype_str
 
 IMPLS = ("reference", "xla_flash", "distr", "pallas_flash", "pallas_distr")
+
+# Resolution kind per impl for the block-size autotuner (repro.tune); the
+# XLA path is keyed separately from the Pallas kernel — same analytic
+# search space, different measured optimum.  The distr impls are absent:
+# their dispatch reads DistrConfig's blocks, resolved via
+# DistrConfig.resolved (kinds "xla_distr" / "distr").
+_TUNE_KIND = {
+    "xla_flash": "xla_flash",
+    "pallas_flash": "flash",
+}
 
 
 @dataclass(frozen=True)
@@ -34,9 +48,16 @@ class AttentionConfig:
     impl: str = "xla_flash"
     distr: DistrConfig = field(default_factory=DistrConfig)
     # Kernel block sizes for the exact paths (distr block sizes live in
-    # DistrConfig so the paper's (l, m) study has one home).
-    block_q: int = 128
-    block_k: int = 128
+    # DistrConfig so the paper's (l, m) study has one home).  ``None`` means
+    # "auto": resolved at dispatch by the block-size autotuner according to
+    # REPRO_TUNE (off → static 128, analytic → paper §3.3.1 rule, measure →
+    # measured best from the persistent cache; DESIGN.md §Autotuning).
+    block_q: int | None = None
+    block_k: int | None = None
+    # Decode split-K length — a separate knob from the fwd KV tile (pinning
+    # prefill tiles must not override the decode split's own tuning).
+    # None = auto (REPRO_TUNE, keyed per cache capacity).
+    block_k_decode: int | None = None
     # Pallas interpret mode: None = auto (compiled on TPU, interpreter on
     # the CPU container); set explicitly only to force one mode.
     interpret: bool | None = None
@@ -46,6 +67,53 @@ class AttentionConfig:
 
     def with_impl(self, impl: str) -> "AttentionConfig":
         return replace(self, impl=impl)
+
+
+def resolve_attention_blocks(
+    cfg: AttentionConfig,
+    *,
+    d: int,
+    n_q: int,
+    n_k: int | None = None,
+    dtype: str = "float32",
+    causal: bool = False,
+    bwd: bool = False,
+) -> BlockSizes:
+    """Concrete :class:`BlockSizes` for one dispatch site.
+
+    Explicit ints in the config always win; both-``None`` resolves through
+    the autotuner under the key (impl-kind, backend, dtype, d, G*,
+    seq-bucket, causal).  A *partial* pin (one int, one None) uses the
+    static default for the free dim — mixing a pinned dim into a tuned
+    pair measured for a different combination would produce a tile the
+    search never validated.  ``bwd=True`` (training warm-up) additionally
+    resolves the backward dQ/dKV keys in measure mode; forward-only
+    dispatch leaves them to resolve lazily at backward-trace time.
+    Shape-only — safe to call while tracing.
+    """
+    n_k = n_k if n_k is not None else n_q
+    if cfg.impl in ("distr", "pallas_distr"):
+        # The distr dispatch reads DistrConfig's blocks, not ours — resolve
+        # (or pass through) those, so warm-up and launcher logs report the
+        # blocks that actually execute.
+        dcfg = cfg.distr.resolved(
+            d, max(n_q, n_k), dtype=dtype, causal=causal,
+            xla=(cfg.impl == "distr"), interpret=cfg.interpret,
+        )
+        return BlockSizes.from_pair(dcfg.block_q, dcfg.block_k)
+    if cfg.block_q is not None or cfg.block_k is not None:
+        # Fully pinned, or a partial pin (free dim → static default).
+        return BlockSizes.from_pair(cfg.block_q or 128, cfg.block_k or 128)
+    kind = _TUNE_KIND.get(cfg.impl)
+    if kind is None:  # reference oracle: blocks unused
+        return BlockSizes.from_pair(128, 128)
+    interpret = cfg.interpret if cfg.impl.startswith("pallas") else False
+    from repro.tune.autotune import resolve_block_sizes
+
+    return resolve_block_sizes(
+        kind, d=d, n=max(n_q, n_k), dtype=dtype, causal=causal,
+        interpret=interpret, bwd=bwd,
+    )
 
 
 def attend(
@@ -68,11 +136,14 @@ def attend(
         if kv_mask is not None:
             # Blockwise path has no kv_mask plumbing; the oracle handles it.
             return reference_attention(q, k, v, causal=causal, scale=scale, kv_mask=kv_mask)
-        n = q.shape[2]
-        if n < cfg.block_q or n % cfg.block_q or k.shape[2] % cfg.block_k:
-            return reference_attention(q, k, v, causal=causal, scale=scale)
+        bs = resolve_attention_blocks(
+            cfg, d=q.shape[-1], n_q=q.shape[2], n_k=k.shape[2],
+            dtype=_dtype_str(q), causal=causal,
+        )
+        # Ragged lengths stay blockwise: blockwise_flash_reference pads and
+        # masks internally (no silent O(N²) dense fallback).
         return blockwise_flash_reference(
-            q, k, v, block_q=cfg.block_q, block_k=cfg.block_k, causal=causal, scale=scale
+            q, k, v, block_q=bs.block_q, block_k=bs.block_k, causal=causal, scale=scale
         )
     if cfg.impl == "distr":
         return distr_attention(
@@ -84,9 +155,13 @@ def attend(
             return reference_attention(q, k, v, causal=causal, scale=scale, kv_mask=kv_mask)
         from repro.kernels import ops  # deferred: kernels are optional at import
 
+        bs = resolve_attention_blocks(
+            cfg, d=q.shape[-1], n_q=q.shape[2], n_k=k.shape[2],
+            dtype=_dtype_str(q), causal=causal,
+        )
         return ops.flash_attention(
-            q, k, v, causal=causal, scale=scale,
-            block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret,
+            q, k, v, causal=causal, scale=scale, blocks=bs,
+            interpret=cfg.interpret,
         )
     if cfg.impl == "pallas_distr":
         if kv_mask is not None:
@@ -150,6 +225,6 @@ def attend_decode(
 
     return ops.decode_attention(
         q, k, v, lengths=lengths, k_fused=k_fused, perm=perm,
-        group_size=group_size, scale=scale, block_k=cfg.block_k,
+        group_size=group_size, scale=scale, block_k=cfg.block_k_decode,
         interpret=cfg.interpret,
     )

@@ -29,7 +29,10 @@ class DistrConfig:
     """The paper's tunables.
 
     group_size: the sampling rate G* (2, 4, 8, 16).  d_eff = d / G*.
-    block_q / block_k: the (l, m) block sizes of §3.3.1.
+    block_q / block_k: the (l, m) block sizes of §3.3.1.  ``None`` = auto:
+      resolved by the block-size autotuner (repro.tune) at dispatch; note
+      block_q is also the LSH permutation granularity, so tuning it trades
+      grouping locality against tile efficiency.
     estimator: "sample" (paper) | "mean" (beyond-paper variant).
     shared_kv_perm: beyond-paper — derive one permutation per KV group from
       the mean of its query heads, so fused K̂ is computed once per KV head
@@ -38,8 +41,8 @@ class DistrConfig:
     """
 
     group_size: int = 2
-    block_q: int = 128
-    block_k: int = 128
+    block_q: int | None = 128
+    block_k: int | None = 128
     estimator: str = "sample"
     shared_kv_perm: bool = False
     proj_seed: int = 0
@@ -49,6 +52,33 @@ class DistrConfig:
 
     def d_eff(self, d: int) -> int:
         return d // self.group_size
+
+    def resolved(
+        self, d: int, n: int, *, dtype: str = "float32",
+        causal: bool = False, xla: bool = True,
+        interpret: bool | None = None,
+    ) -> "DistrConfig":
+        """Fill ``None`` block sizes via the autotuner (repro.tune); explicit
+        ints pass through unchanged.  A *partial* pin gets the static 128
+        default for the free dim (same policy as the flash resolvers —
+        mixing a pinned dim into a jointly-tuned pair would produce a tile
+        the sweep never validated)."""
+        from dataclasses import replace
+
+        if self.block_q is not None and self.block_k is not None:
+            return self
+        if self.block_q is not None or self.block_k is not None:
+            return replace(
+                self, block_q=self.block_q or 128, block_k=self.block_k or 128
+            )
+        from repro.tune.autotune import resolve_block_sizes
+
+        bs = resolve_block_sizes(
+            "xla_distr" if xla else "distr", d=d, n=n, dtype=dtype,
+            group_size=self.group_size, causal=causal,
+            interpret=False if xla else interpret,
+        )
+        return replace(self, block_q=bs.block_q, block_k=bs.block_k)
 
 
 def _pad_to_multiple(x: jnp.ndarray, block: int, axis: int) -> tuple[jnp.ndarray, int]:
@@ -104,6 +134,11 @@ def distr_attention(
     n_kv = k.shape[1]
     r = hq // n_kv
     scale = scale if scale is not None else 1.0 / (d**0.5)
+    cfg = cfg.resolved(
+        d, max(n, k.shape[2]),
+        dtype="bfloat16" if q.dtype == jnp.bfloat16 else "float32",
+        causal=causal, xla=True,
+    )
     g = cfg.group_size
     dg = cfg.d_eff(d)
 
@@ -231,6 +266,10 @@ def distr_scores(
     """The approximate score matrix Ŝ alone (used by the paper's error study,
     Tables 3-4).  q, k: (B, H, N, d) → (B, H, N, N)."""
     b, h, n, d = q.shape
+    cfg = cfg.resolved(
+        d, n, dtype="bfloat16" if q.dtype == jnp.bfloat16 else "float32",
+        xla=True,
+    )
     q, pad_q = _pad_to_multiple(q, cfg.block_q, axis=2)
     nq = q.shape[2] // cfg.block_q
     if proj is None:

@@ -79,19 +79,32 @@ def blockwise_flash_reference(
 ) -> jnp.ndarray:
     """FA-2 style blockwise exact attention (online softmax), pure JAX.
 
-    Sequence lengths must be divisible by the block sizes (the model layer
-    pads); kept strict here so the block bookkeeping stays legible.
+    Ragged sequence lengths are handled in-place: inputs are padded to the
+    block grid (mirroring ``kernels.ops._pad_seq``) and the dead KV tail is
+    masked out, so every length stays on the O(N)-memory blockwise path —
+    there is no dense fallback.
     """
     b, hq, n, d = q.shape
     dv = v.shape[-1]
     n_kv, nk = k.shape[1], k.shape[2]
-    if n % block_q or nk % block_k:
-        raise ValueError("sequence length must divide block sizes")
     scale = scale if scale is not None else 1.0 / (d**0.5)
     r = hq // n_kv
 
-    nq_blocks = n // block_q
-    nk_blocks = nk // block_k
+    def _pad_seq(x, block, axis):
+        pad = (-x.shape[axis]) % block
+        if pad:
+            widths = [(0, 0)] * x.ndim
+            widths[axis] = (0, pad)
+            x = jnp.pad(x, widths)
+        return x
+
+    q = _pad_seq(q, block_q, 2)
+    k = _pad_seq(k, block_k, 2)
+    v = _pad_seq(v, block_k, 2)
+    n_pad, nk_pad = q.shape[2], k.shape[2]
+
+    nq_blocks = n_pad // block_q
+    nk_blocks = nk_pad // block_k
 
     qg = _group_queries(q, n_kv)  # (b, g, r, n, d) — compute dtype
     kf = k
@@ -108,10 +121,13 @@ def blockwise_flash_reference(
                 "bgrnd,bgmd->bgrnm", q_blk, k_blk,
                 preferred_element_type=jnp.float32,
             ) * scale
-            if causal:
+            if causal or nk_pad != nk:
                 qi = iq * block_q + jnp.arange(block_q)[:, None]
                 kj = ik * block_k + jnp.arange(block_k)[None, :]
-                s = jnp.where(kj <= qi, s, NEG_INF)
+                mask = kj <= qi if causal else kj < nk
+                if causal and nk_pad != nk:  # dead padded keys
+                    mask = jnp.logical_and(mask, kj < nk)
+                s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m_i, s.max(axis=-1))
             alpha = jnp.exp(m_i - m_new)
             p = jnp.exp(s - m_new[..., None])
@@ -135,5 +151,5 @@ def blockwise_flash_reference(
     outer = jax.checkpoint(outer, prevent_cse=False)
     _, blocks = jax.lax.scan(outer, None, jnp.arange(nq_blocks))
     # blocks: (nq, b, g, r, block_q, dv) → (b, hq, n, dv)
-    o = jnp.moveaxis(blocks, 0, 3).reshape(b, n_kv, r, n, dv)
-    return o.reshape(b, hq, n, dv).astype(q.dtype)
+    o = jnp.moveaxis(blocks, 0, 3).reshape(b, n_kv, r, n_pad, dv)
+    return o.reshape(b, hq, n_pad, dv)[:, :, :n, :].astype(q.dtype)

@@ -31,6 +31,8 @@ from repro.kernels import decode as decode_kernels
 from repro.kernels.distr_attention import distr_attention_kernel_call
 from repro.kernels.flash_attention import flash_attention_kernel_call
 from repro.kernels.ssd import ssd_kernel_call
+from repro.tune.block_sizes import BlockSizes
+from repro.tune.cache import dtype_str as _dtype_str
 
 
 def default_interpret() -> bool:
@@ -44,6 +46,17 @@ def _pad_seq(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
     if pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
     return x, n
+
+
+LSE_PAD = 1e30  # padded residual rows: exp(s − LSE_PAD) ≡ 0 kills their grads
+
+
+def _pad_rows(x: jnp.ndarray, block: int, value: float = 0.0) -> jnp.ndarray:
+    """Pad the row axis of per-row residuals (BHq, N) to a block multiple."""
+    pad = (-x.shape[1]) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)), constant_values=value)
+    return x
 
 
 def _flatten_heads(x: jnp.ndarray) -> jnp.ndarray:
@@ -84,54 +97,79 @@ def _flash_fwd_impl(causal, scale, block_q, block_k, interpret, q, k, v,
     return out.reshape(b, hq, -1, d)[:, :, :n_orig, :], lse
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def _flash_attention(causal, scale, block_q, block_k, interpret, q, k, v):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash_attention(causal, scale, blocks, interpret, q, k, v):
     # Primal (inference / non-differentiated) path: skip the LSE residual —
     # it is only consumed by the backward kernels.
     out, _ = _flash_fwd_impl(
-        causal, scale, block_q, block_k, interpret, q, k, v,
+        causal, scale, blocks.block_q, blocks.block_k, interpret, q, k, v,
         with_residuals=False,
     )
     return out
 
 
-def _flash_vjp_fwd(causal, scale, block_q, block_k, interpret, q, k, v):
+def _flash_vjp_fwd(causal, scale, blocks, interpret, q, k, v):
     out, lse = _flash_fwd_impl(
-        causal, scale, block_q, block_k, interpret, q, k, v,
+        causal, scale, blocks.block_q, blocks.block_k, interpret, q, k, v,
         with_residuals=True,
     )
     return out, (q, k, v, out, lse)
 
 
-def _flash_vjp_bwd(causal, scale, block_q, block_k, interpret, res, do):
+def _flash_vjp_bwd(causal, scale, blocks, interpret, res, do):
+    # The backward kernels run their own tuned tiles (``blocks.dq()`` for
+    # the dQ kernel, ``blocks.dkv()`` for the dK/dV kernel) — carried in the
+    # custom_vjp static args, not in the residuals.  The fwd LSE is padded
+    # to the *forward* q-block, so residuals are re-sliced to the live
+    # length and re-padded per kernel; dead rows get LSE=+big ⇒ P ≡ 0,
+    # contributing nothing to dK/dV.
     q, k, v, o, lse = res
     b, hq, n, d = q.shape
     hkv = k.shape[1]
     q_per_kv = hq // hkv
+    nk = k.shape[2]
+    do = do.astype(q.dtype)
+    lse_n = lse[:, :n]
 
-    qp, n_orig = _pad_seq(q, block_q)
-    kp, kv_len = _pad_seq(k, block_k)
-    vp, _ = _pad_seq(v, block_k)
-    dop, _ = _pad_seq(do.astype(q.dtype), block_q)
-    op, _ = _pad_seq(o, block_q)
+    blocks = _resolve_bwd_blocks(blocks, q, k, causal, interpret)
+    bq_dq, bk_dq = blocks.dq()
+    bq_dkv, bk_dkv = blocks.dkv()
 
-    qf, kf, vf = _flatten_heads(qp), _flatten_heads(kp), _flatten_heads(vp)
-    dof, of = _flatten_heads(dop), _flatten_heads(op)
+    def q_side(block):
+        qp, _ = _pad_seq(q, block)
+        dop, _ = _pad_seq(do, block)
+        op, _ = _pad_seq(o, block)
+        return _flatten_heads(qp), _flatten_heads(dop), _flatten_heads(op)
 
-    delta = bwd.delta_kernel_call(of, dof, block_q=block_q, interpret=interpret)
+    def kv_side(block):
+        kp, _ = _pad_seq(k, block)
+        vp, _ = _pad_seq(v, block)
+        return _flatten_heads(kp), _flatten_heads(vp)
+
+    qf1, dof1, of1 = q_side(bq_dq)
+    kf1, vf1 = kv_side(bk_dq)
+    delta = bwd.delta_kernel_call(of1, dof1, block_q=bq_dq, interpret=interpret)
+    delta_n = delta[:, :n]
     dq = bwd.flash_dq_kernel_call(
-        qf, kf, vf, dof, lse, delta,
+        qf1, kf1, vf1, dof1,
+        _pad_rows(lse_n, bq_dq, LSE_PAD), _pad_rows(delta_n, bq_dq),
         q_per_kv=q_per_kv, scale=scale, causal=causal,
-        block_q=block_q, block_k=block_k, kv_len=kv_len, interpret=interpret,
+        block_q=bq_dq, block_k=bk_dq, kv_len=nk, interpret=interpret,
     )
+    if (bq_dkv, bk_dkv) == (bq_dq, bk_dq):
+        qf2, dof2, kf2, vf2 = qf1, dof1, kf1, vf1
+    else:
+        qf2, dof2, _ = q_side(bq_dkv)
+        kf2, vf2 = kv_side(bk_dkv)
     dk_h, dv_h = bwd.flash_dkv_kernel_call(
-        qf, kf, vf, dof, lse, delta,
+        qf2, kf2, vf2, dof2,
+        _pad_rows(lse_n, bq_dkv, LSE_PAD), _pad_rows(delta_n, bq_dkv),
         q_per_kv=q_per_kv, scale=scale, causal=causal,
-        block_q=block_q, block_k=block_k, kv_len=kv_len, interpret=interpret,
+        block_q=bq_dkv, block_k=bk_dkv, kv_len=nk, interpret=interpret,
     )
-    dq = dq.reshape(b, hq, -1, d)[:, :, :n_orig, :].astype(q.dtype)
-    dk = _gqa_sum(dk_h, b, hkv, q_per_kv, kv_len).astype(k.dtype)
-    dv = _gqa_sum(dv_h, b, hkv, q_per_kv, kv_len).astype(v.dtype)
+    dq = dq.reshape(b, hq, -1, d)[:, :, :n, :].astype(q.dtype)
+    dk = _gqa_sum(dk_h, b, hkv, q_per_kv, nk).astype(k.dtype)
+    dv = _gqa_sum(dv_h, b, hkv, q_per_kv, nk).astype(v.dtype)
     return dq, dk, dv
 
 
@@ -139,10 +177,50 @@ _flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret")
+    jax.jit, static_argnames=("causal", "scale", "blocks", "interpret")
 )
-def _flash_attention_jit(q, k, v, causal, scale, block_q, block_k, interpret):
-    return _flash_attention(causal, scale, block_q, block_k, interpret, q, k, v)
+def _flash_attention_jit(q, k, v, causal, scale, blocks, interpret):
+    return _flash_attention(causal, scale, blocks, interpret, q, k, v)
+
+
+def _resolve_flash_blocks(q, k, causal, interpret, block_q, block_k):
+    """Explicit ints win (a partial pin gets the static default for the
+    free dim — never a tuned value measured for a different pair); both
+    None resolves the forward pair through the autotuner.  Backward tiles
+    stay None here and resolve lazily at backward-trace time."""
+    if block_q is not None or block_k is not None:
+        return BlockSizes.from_pair(block_q or 128, block_k or 128)
+    from repro.tune.autotune import resolve_block_sizes
+
+    return resolve_block_sizes(
+        "flash", d=q.shape[-1], n=max(q.shape[2], k.shape[2]),
+        dtype=_dtype_str(q), causal=causal, interpret=interpret,
+    )
+
+
+def _resolve_bwd_blocks(blocks, q, k, causal, interpret):
+    """Fill the backward dQ/dKV tiles at backward-trace time (measure mode
+    only): forward-only dispatch — serving — never pays a backward-kernel
+    sweep, and training pays it once, when grad tracing first reaches the
+    op.  Explicitly-set backward tiles and off/analytic modes pass through
+    (``BlockSizes.dq()/dkv()`` fall back to the fwd pair)."""
+    if blocks.block_q_dq is not None or blocks.block_q_dkv is not None:
+        return blocks
+    from repro.tune.autotune import get_autotuner, tune_mode
+
+    if tune_mode() != "measure":
+        return blocks
+    kw = dict(
+        d=q.shape[-1], n=max(q.shape[2], k.shape[2]), dtype=_dtype_str(q),
+        causal=causal, interpret=interpret,
+    )
+    tuner = get_autotuner()
+    dq = tuner.resolve_pair("flash_dq", **kw)
+    dkv = tuner.resolve_pair("flash_dkv", **kw)
+    return blocks.with_(
+        block_q_dq=dq[0], block_k_dq=dq[1],
+        block_q_dkv=dkv[0], block_k_dkv=dkv[1],
+    )
 
 
 def flash_attention(
@@ -152,16 +230,23 @@ def flash_attention(
     *,
     causal: bool = False,
     scale: float | None = None,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    blocks: BlockSizes | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Exact FA-2 Pallas kernel, differentiable.  q: (B,Hq,N,d); k,v:
-    (B,Hkv,Nk,d).  ``interpret=None`` auto-detects the backend."""
+    (B,Hkv,Nk,d).  ``interpret=None`` auto-detects the backend.
+
+    Block sizes: pass ``blocks`` (a full :class:`BlockSizes`, e.g. from the
+    autotuner — carries separate backward dQ/dKV tiles) or the legacy
+    ``block_q``/``block_k`` pair; ``None`` means auto (REPRO_TUNE)."""
     scale = float(scale) if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
     if interpret is None:
         interpret = default_interpret()
-    return _flash_attention_jit(q, k, v, causal, scale, block_q, block_k, interpret)
+    if blocks is None:
+        blocks = _resolve_flash_blocks(q, k, causal, interpret, block_q, block_k)
+    return _flash_attention_jit(q, k, v, causal, scale, blocks, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -310,10 +395,17 @@ def distr_attention(
 
     Stage 1 (outside kernel, XLA): LSH permutations per Q block + Q sampling.
     Stage 2 (kernel): per-KV-block fusion + reduced-d flash attention.
+
+    ``cfg.block_q``/``block_k`` may be None (auto): resolved here through
+    the autotuner under the Pallas "distr" kind.
     """
     scale = float(scale) if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
     if interpret is None:
         interpret = default_interpret()
+    cfg = cfg.resolved(
+        q.shape[-1], max(q.shape[2], k.shape[2]), dtype=_dtype_str(q),
+        causal=causal, xla=False, interpret=interpret,
+    )
     return _distr_attention_jit(q, k, v, cfg, causal, scale, interpret)
 
 
@@ -407,7 +499,7 @@ def decode_attention(
     perm: jnp.ndarray | None = None,
     group_size: int = 1,
     scale: float | None = None,
-    block_k: int = 128,
+    block_k: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Split-K flash-decoding over a KV cache (kernels/decode.py).
@@ -429,6 +521,16 @@ def decode_attention(
     scale = float(scale) if scale is not None else 1.0 / (d ** 0.5)
     if interpret is None:
         interpret = default_interpret()
+    if block_k is None:
+        # Auto: tuned split length for this cache capacity (REPRO_TUNE).
+        from repro.tune.autotune import resolve_decode_block
+
+        nk_cache = (k_fused if k_fused is not None else k).shape[2]
+        block_k = resolve_decode_block(
+            d=d, n=nk_cache, dtype=_dtype_str(v),
+            group_size=group_size if k_fused is not None else 1,
+            interpret=interpret,
+        )
     if k_fused is not None:
         if perm is None or group_size <= 1:
             raise ValueError("k_fused needs perm and group_size > 1")

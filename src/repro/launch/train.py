@@ -39,11 +39,33 @@ def main() -> None:
                     help="glob of .bin token shards (default: synthetic)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tune", choices=["off", "analytic", "measure"],
+                    default=None,
+                    help="block-size autotuning mode (sets REPRO_TUNE; "
+                         "default: inherit the environment)")
     args = ap.parse_args()
+
+    if args.tune:
+        os.environ["REPRO_TUNE"] = args.tune
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.impl:
         cfg = cfg.replace(attention=cfg.attention.with_impl(args.impl))
+
+    # Resolve (and under measure mode, sweep + persist) the training-shape
+    # attention blocks up front, so the first jitted step never hides a
+    # timing run.  Explicit config ints pass through untouched.
+    acfg = cfg.attention
+    if acfg.impl != "reference" and (acfg.block_q is None or acfg.block_k is None):
+        from repro.core.api import resolve_attention_blocks
+
+        blocks = resolve_attention_blocks(
+            acfg, d=cfg.head_dim_, n_q=args.seq,
+            dtype="bfloat16" if cfg.compute_dtype == "bfloat16" else "float32",
+            causal=True, bwd=True,  # training traces the backward kernels
+        )
+        print(f"[train] attention blocks ({os.environ.get('REPRO_TUNE', 'off')}): "
+              f"{blocks}")
 
     opt_cfg = OptimizerConfig(
         peak_lr=args.lr,

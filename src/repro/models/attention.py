@@ -124,7 +124,8 @@ def cache_insert(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray) -> jnp.
     cache: (B, H, S, d); new: (B, H, 1, d); pos: (B,) int32.  Positions are
     absolute; the write slot is ``pos mod S`` — past ``S`` tokens the ring
     wraps and the oldest entries are overwritten (serve.kv_cache ring
-    invariants; the engine finishes sequences before wrap by default).
+    invariants; the engine rides this as sliding-window eviction, attending
+    over the most recent ``min(length, S)`` tokens).
     """
     s = cache.shape[2]
     return jax.vmap(

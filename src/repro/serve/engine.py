@@ -5,6 +5,17 @@ prefilled one at a time (bucketed prompt padding bounds recompiles) and their
 caches inserted into free slots; every ``step()`` advances *all* active slots
 by one token in a single jitted decode.  Finished sequences free their slot
 immediately — the vLLM-style continuous batching pattern at step granularity.
+
+Long generations: for ring-layout caches (GQA ``length``-tracked) decoding
+continues *past* ``max_len`` with sliding-window eviction — the ring write
+(``pos mod S``) overwrites the oldest token and the kernels attend over the
+live window ``min(length, max_len)``, so a slot serves arbitrarily long
+outputs at bounded memory.  Families without the ring invariant (MLA / SSM /
+hybrid / enc-dec) still finish before wrap.
+
+Construction also warms the block-size autotuner (``repro.tune``) for every
+prefill bucket and the decode split — under ``REPRO_TUNE=measure`` the
+timing sweeps run once here, never inside a serving step.
 """
 from __future__ import annotations
 
@@ -18,6 +29,7 @@ import numpy as np
 from repro.serve import kv_cache
 from repro.serve.sampler import sample
 from repro.serve.serve_step import make_decode_step, make_prefill
+from repro.tune.autotune import warm_engine
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -52,6 +64,11 @@ class ServeEngine:
         self.temperature = temperature
         self._uid = itertools.count()
         self._rng = jax.random.PRNGKey(seed)
+
+        # Resolve every block-size key this engine's steps will hit (prefill
+        # buckets + decode split) before the first request arrives; under
+        # REPRO_TUNE=measure the sweeps run and persist here, once.
+        self.tuned_blocks = warm_engine(cfg, max_len)
 
         self.cache = kv_cache.init_cache(cfg, max_slots, max_len)
         self.pos = jnp.zeros((max_slots,), jnp.int32)
@@ -155,12 +172,17 @@ class ServeEngine:
 
         done_now = []
         toks = np.asarray(next_tokens)
+        # Ring caches (GQA, length-tracked) slide past max_len: the ring
+        # write evicts the oldest token and the kernels see the live window
+        # min(length, max_len).  Other cache layouts (MLA/SSM/hybrid/encdec)
+        # have no ring invariant, so their sequences finish before wrap.
+        sliding = "length" in self.cache
         for slot, req in list(self.active.items()):
             t = int(toks[slot])
             req.generated.append(t)
             limit = len(req.generated) >= req.max_new_tokens
             hit_eos = req.eos_id is not None and t == req.eos_id
-            full = int(self.pos[slot]) >= self.max_len - 2
+            full = (not sliding) and int(self.pos[slot]) >= self.max_len - 2
             if limit or hit_eos or full:
                 req.done = True
                 done_now.append(req)

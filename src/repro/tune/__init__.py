@@ -1,0 +1,46 @@
+"""Empirical block-size autotuning (paper §3.3.1, taken to hardware).
+
+The analytic model in ``core.block_size`` ranks candidate (l, m) tiles by
+the paper's HBM-I/O objective; this package closes the loop by *measuring*
+the top candidates on the actual backend and caching the winner, keyed by
+``(kernel, backend, dtype, d, G*, seq-bucket, causal)``.
+
+Env knobs (DESIGN.md §Autotuning):
+
+  REPRO_TUNE=off|analytic|measure   resolution mode for "auto" (None) block
+                                    sizes; default "off" = static 128×128.
+  REPRO_TUNE_CACHE=<path>           persistent JSON cache location.
+"""
+from repro.tune.block_sizes import BlockSizes
+from repro.tune.cache import TuneCache, cache_key, default_cache_path, seq_bucket
+from repro.tune.measure import measure_candidates, wall_timer
+from repro.tune.autotune import (
+    Autotuner,
+    decode_candidates,
+    get_autotuner,
+    pair_candidates,
+    reset_autotuner,
+    resolve_block_sizes,
+    resolve_decode_block,
+    tune_mode,
+    warm_engine,
+)
+
+__all__ = [
+    "Autotuner",
+    "BlockSizes",
+    "TuneCache",
+    "cache_key",
+    "decode_candidates",
+    "default_cache_path",
+    "get_autotuner",
+    "measure_candidates",
+    "pair_candidates",
+    "reset_autotuner",
+    "resolve_block_sizes",
+    "resolve_decode_block",
+    "seq_bucket",
+    "tune_mode",
+    "wall_timer",
+    "warm_engine",
+]

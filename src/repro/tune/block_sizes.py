@@ -1,0 +1,64 @@
+"""The tuned-block-size record threaded through every kernel call site.
+
+One frozen (hashable) dataclass covers the distinct block knobs the kernels
+actually expose:
+
+  * forward (l, m) = ``(block_q, block_k)`` — flash & distr fwd kernels;
+  * backward dQ kernel blocks — the dQ kernel streams K/V per Q block, so
+    its optimal tile differs from the dKV kernel, which streams Q/dO per KV
+    block and additionally keeps a dK *and* dV accumulator resident;
+  * backward dKV kernel blocks;
+  * decode split-K ``block_k`` (the split length; ``num_splits`` is derived
+    from the cache capacity and kept for reporting).
+
+``None`` fields fall back to the forward pair, so a bare
+``BlockSizes(128, 128)`` reproduces the pre-autotuner behaviour exactly.
+Being frozen it is a valid ``jax.jit`` static argument and rides through
+``custom_vjp`` nondiff args — the backward blocks travel as static
+metadata, not as residuals.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class BlockSizes:
+    block_q: int = 128
+    block_k: int = 128
+    # Backward dQ kernel (None → fwd pair).
+    block_q_dq: int | None = None
+    block_k_dq: int | None = None
+    # Backward dKV kernel (None → fwd pair).
+    block_q_dkv: int | None = None
+    block_k_dkv: int | None = None
+    # Decode split-K: split length along the KV axis (None → 128).
+    block_k_decode: int | None = None
+    # Derived, informational: ceil(cache_len / block_k_decode) at tune time.
+    num_splits: int | None = None
+
+    # -- concrete accessors -------------------------------------------------
+    def fwd(self) -> tuple[int, int]:
+        return (self.block_q, self.block_k)
+
+    def dq(self) -> tuple[int, int]:
+        return (
+            self.block_q_dq if self.block_q_dq is not None else self.block_q,
+            self.block_k_dq if self.block_k_dq is not None else self.block_k,
+        )
+
+    def dkv(self) -> tuple[int, int]:
+        return (
+            self.block_q_dkv if self.block_q_dkv is not None else self.block_q,
+            self.block_k_dkv if self.block_k_dkv is not None else self.block_k,
+        )
+
+    def decode(self) -> int:
+        return self.block_k_decode if self.block_k_decode is not None else 128
+
+    def with_(self, **kw) -> "BlockSizes":
+        return replace(self, **kw)
+
+    @staticmethod
+    def from_pair(block_q: int, block_k: int) -> "BlockSizes":
+        return BlockSizes(block_q=int(block_q), block_k=int(block_k))

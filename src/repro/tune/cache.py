@@ -1,0 +1,128 @@
+"""Persistent JSON cache for measured block sizes.
+
+Keyed by ``(kernel, backend, dtype, d, G*, seq-bucket, causal)`` — the
+parameters the optimum actually shifts with (FlashAttention's IO model: the
+right tile depends on head dim, element width, the grouped score width
+d/G*, and the memory system).  Batch and head counts only scale the grid,
+not the per-instance working set, so they are deliberately *not* part of
+the key — one warm-up covers every batch size.
+
+The file is a flat ``{key: entry}`` JSON object; entries store the winning
+blocks plus the measured table so benchmarks can re-plot without re-timing.
+``REPRO_TUNE_CACHE`` overrides the location (serve/train jobs point it at a
+shared path, warm once, and every later process resolves by lookup).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "blocksizes.json"
+    )
+
+
+def dtype_str(x) -> str:
+    """Canonical dtype label for cache keys ("bfloat16" | "float32").
+    Accepts an array or a dtype; anything non-bf16 keys as float32 (the
+    kernels accumulate in f32 either way)."""
+    dt = getattr(x, "dtype", x)
+    return "bfloat16" if str(dt) == "bfloat16" else "float32"
+
+
+def seq_bucket(n: int) -> int:
+    """Power-of-two sequence bucket (floor 128): nearby lengths share a
+    tuning entry, mirroring the serve engine's prefill buckets."""
+    b = 128
+    while b < n:
+        b *= 2
+    return b
+
+
+def cache_key(
+    kernel: str,
+    *,
+    backend: str,
+    dtype: str,
+    d: int,
+    group_size: int = 1,
+    n: int,
+    causal: bool = False,
+) -> str:
+    return (
+        f"{kernel}|backend={backend}|dtype={dtype}|d={int(d)}"
+        f"|g={int(group_size)}|nb={seq_bucket(int(n))}|causal={bool(causal)}"
+    )
+
+
+class TuneCache:
+    """In-memory view of one JSON cache file (lazy load, atomic save)."""
+
+    def __init__(self, path: str | None = None):
+        self._explicit_path = path
+        self._data: dict | None = None
+        self._loaded_from: str | None = None
+
+    @property
+    def path(self) -> str:
+        return self._explicit_path or default_cache_path()
+
+    def _load(self) -> dict:
+        path = self.path
+        if self._data is None or self._loaded_from != path:
+            self._loaded_from = path
+            try:
+                with open(path) as f:
+                    self._data = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str) -> dict | None:
+        return self._load().get(key)
+
+    def put(self, key: str, entry: dict, *, save: bool = True) -> None:
+        data = self._load()
+        data[key] = entry
+        if save:
+            self.save()
+
+    def save(self) -> None:
+        path = self.path
+        data = self._load()
+        # Merge-on-save: the path may be shared across processes (the
+        # documented warm-once pattern), so re-read and fold in entries a
+        # concurrent writer persisted since our load — our own keys win.
+        try:
+            with open(path) as f:
+                on_disk = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            on_disk = {}
+        data = {**on_disk, **data}
+        self._data = data
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        # Atomic replace: a crashed/parallel writer never leaves a torn file.
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path) or ".", suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def clear_memory(self) -> None:
+        """Drop the in-memory view (tests; a changed env path reloads too)."""
+        self._data = None
+        self._loaded_from = None

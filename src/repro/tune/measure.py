@@ -1,0 +1,56 @@
+"""Measurement harness: time candidate block sizes with an injectable timer.
+
+``wall_timer`` is the real thing (warmup + ``block_until_ready`` medians);
+tests inject a deterministic fake ``timer(fn, candidate) -> seconds`` so
+tuning decisions are reproducible without wall-clock noise.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# timer(run_fn, candidate) -> seconds; run_fn is a zero-arg callable that
+# executes one candidate configuration end to end.
+Timer = Callable[[Callable[[], object], object], float]
+
+
+def wall_timer(*, warmup: int = 1, iters: int = 3) -> Timer:
+    """Median wall-clock timer over jitted callables (device-synchronised)."""
+
+    def timer(run_fn: Callable[[], object], candidate: object) -> float:
+        del candidate
+        for _ in range(warmup):
+            jax.block_until_ready(run_fn())
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run_fn())
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2]
+
+    return timer
+
+
+def measure_candidates(
+    make_run, candidates: list, timer: Timer
+) -> dict:
+    """Time every candidate; returns ``{candidate: seconds}``.
+
+    ``make_run(candidate)`` builds the zero-arg callable for one candidate
+    (inputs are closed over, so every candidate sees identical data).
+    Candidates that fail to build or run (e.g. a tile the backend rejects)
+    are skipped rather than aborting the sweep.
+    """
+    results: dict = {}
+    for cand in candidates:
+        try:
+            run_fn = make_run(cand)
+            results[cand] = float(timer(run_fn, cand))
+        except Exception:  # noqa: BLE001 — an illegal tile is not fatal
+            continue
+    if not results:
+        raise RuntimeError(f"no candidate in {candidates!r} was measurable")
+    return results

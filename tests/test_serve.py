@@ -135,3 +135,70 @@ def test_fused_k_cache_layout_and_accuracy():
     # random static perms: unbiased estimate, bounded deviation on gaussian
     err = float(jnp.abs(s_approx - s_exact).mean()) / float(jnp.abs(s_exact).mean())
     assert err < 1.5
+
+
+def test_engine_sliding_window_past_max_len():
+    """Ring-cache engines keep decoding past max_len: the ring write evicts
+    the oldest token, the kernels attend over the live window
+    min(length, max_len), and a request can generate more tokens than the
+    cache holds (ROADMAP: sliding-window eviction)."""
+    cfg = get_config("minicpm-2b", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = 16
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=max_len)
+    eng.add_request([3, 1, 4, 1, 5], max_new_tokens=20)
+    wrapped = False
+    for _ in range(64):
+        eng.step()
+        if eng.active:
+            total = int(np.asarray(eng.cache["length"])[0])
+            wrapped = wrapped or total > max_len
+        if not eng.active and not eng.pending:
+            break
+    done = eng.finished
+    assert len(done) == 1 and len(done[0].generated) == 20
+    assert wrapped, "generation never crossed the cache capacity"
+    assert all(0 <= t < cfg.vocab for t in done[0].generated)
+
+
+def test_sliding_window_decode_matches_manual_window():
+    """Past wrap, a decode step attends over exactly the last S tokens'
+    cached K/V.  With a single layer the cached K/V of token i depend only
+    on its embedding + position (no attention feeds the projections), so
+    the wrapped ring must equal a manually-assembled window cache."""
+    cfg = get_config("minicpm-2b", reduced=True)
+    cfg = cfg.replace(n_layers=1,
+                      attention=cfg.attention.with_impl("reference"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    S, BIG = 8, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 14), 0, cfg.vocab)
+    decode = make_decode_step(cfg)
+
+    # Run A: ring of capacity 8 — prefill 4 tokens, decode 4..12 (wraps at
+    # position 8), then the step under test decodes token 13.
+    _, ring = make_prefill(cfg, S)(params, toks[:, :4])
+    ring["length"] = jnp.asarray([4], jnp.int32)
+    for i in range(4, 13):
+        _, ring = decode(params, toks[:, i : i + 1], ring,
+                         jnp.asarray([i], jnp.int32))
+    got, _ = decode(params, toks[:, 13:14], ring, jnp.asarray([13], jnp.int32))
+
+    # Run B: unbounded cache of 16 over the same stream, then copy the last
+    # S tokens (5..12) into their ring slots (p mod S) by hand.
+    _, big = make_prefill(cfg, BIG)(params, toks[:, :4])
+    big["length"] = jnp.asarray([4], jnp.int32)
+    for i in range(4, 13):
+        _, big = decode(params, toks[:, i : i + 1], big,
+                        jnp.asarray([i], jnp.int32))
+    manual = {key: jnp.zeros_like(val) for key, val in ring.items()}
+    for p in range(5, 13):
+        for key in ("k", "v"):
+            manual[key] = manual[key].at[:, :, :, p % S, :].set(
+                big[key][:, :, :, p, :]
+            )
+    manual["length"] = jnp.asarray([13], jnp.int32)
+    want, _ = decode(params, toks[:, 13:14], manual,
+                     jnp.asarray([13], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(got[:, 0]), np.asarray(want[:, 0]), rtol=2e-3, atol=2e-3
+    )

@@ -1,0 +1,350 @@
+"""Block-size autotuner (repro.tune): cache round-trip/key stability,
+deterministic fake-timer tuning, pruner safety, numerical parity between
+default and tuned blocks, and REPRO_TUNE=measure end-to-end dispatch."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AttentionConfig, attend, reference_attention
+from repro.core.api import attend_decode
+from repro.core.block_size import enumerate_block_sizes, io_count
+from repro.kernels import ops
+from repro.tune import (
+    Autotuner,
+    BlockSizes,
+    TuneCache,
+    cache_key,
+    decode_candidates,
+    pair_candidates,
+    reset_autotuner,
+    seq_bucket,
+)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_tuner(monkeypatch, tmp_path):
+    """Every test gets a private cache path and a fresh singleton; the
+    process-wide tuner is restored afterwards."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    reset_autotuner(None)
+    yield
+    reset_autotuner(None)
+
+
+def _fake_timer_table(table):
+    """Deterministic timer: seconds looked up per candidate."""
+
+    def timer(run_fn, cand):
+        del run_fn
+        return table[cand]
+
+    return timer
+
+
+def _analytic_fake_timer(d, n):
+    """Deterministic 'measurement' consistent with the analytic model:
+    monotone in the paper's I/O count (larger l cheaper), with a small
+    preference for larger m (fewer grid steps)."""
+
+    def timer(run_fn, cand):
+        del run_fn
+        l, m = cand
+        return io_count(l, n, d) + (n // m)
+
+    return timer
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_stability():
+    kw = dict(backend="cpu:interpret", dtype="float32", d=64, group_size=2,
+              n=300, causal=True)
+    k1 = cache_key("flash_fwd", **kw)
+    assert k1 == cache_key("flash_fwd", **kw)  # deterministic
+    # bucketed: nearby lengths share the entry, bucket boundaries split it
+    assert k1 == cache_key("flash_fwd", **{**kw, "n": 511})
+    assert k1 != cache_key("flash_fwd", **{**kw, "n": 513})
+    # every other field is load-bearing
+    for field, val in [("backend", "tpu:compiled"), ("dtype", "bfloat16"),
+                       ("d", 128), ("group_size", 1), ("causal", False)]:
+        assert k1 != cache_key("flash_fwd", **{**kw, field: val})
+    assert k1 != cache_key("flash_dq", **kw)
+
+
+def test_cache_roundtrip_persists(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c = TuneCache(path)
+    entry = {"kernel": "flash_fwd", "best": [256, 256], "table": []}
+    c.put("some|key", entry)
+    assert c.get("some|key") == entry
+    # a brand-new instance reads the persisted file
+    c2 = TuneCache(path)
+    assert c2.get("some|key") == entry
+    # and the file is valid JSON on disk
+    assert json.load(open(path))["some|key"]["best"] == [256, 256]
+
+
+def test_cache_merge_on_save(tmp_path):
+    """A stale in-memory snapshot must not clobber entries another process
+    wrote to the shared cache file (the warm-once pattern)."""
+    path = str(tmp_path / "shared.json")
+    a, b = TuneCache(path), TuneCache(path)
+    assert b.get("anything") is None  # b snapshots the (empty) file
+    a.put("ka", {"best": [1, 1]})
+    b.put("kb", {"best": [2, 2]})  # b's save merges, not overwrites
+    assert set(json.load(open(path))) == {"ka", "kb"}
+
+
+def test_partial_pin_gets_static_default(monkeypatch):
+    """Pinning one block dim must not graft the free dim from a
+    jointly-tuned pair: the free dim falls back to the static 128 and no
+    sweep runs (a raising timer would abort any measurement)."""
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+
+    def no_sweeps(run_fn, cand):
+        raise AssertionError("partial pin must not trigger a sweep")
+
+    reset_autotuner(Autotuner(timer=no_sweeps))
+    from repro.core.api import resolve_attention_blocks
+    from repro.core.distr_attention import DistrConfig
+
+    bs = resolve_attention_blocks(
+        AttentionConfig(impl="pallas_flash", block_q=256, block_k=None),
+        d=64, n_q=512,
+    )
+    assert bs.fwd() == (256, 128)
+    dcfg = DistrConfig(group_size=2, block_q=32, block_k=None).resolved(64, 512)
+    assert (dcfg.block_q, dcfg.block_k) == (32, 128)
+
+
+def test_cache_env_override(monkeypatch, tmp_path):
+    p = tmp_path / "elsewhere.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(p))
+    c = TuneCache()
+    c.put("k", {"best": [128, 128]})
+    assert p.exists()
+
+
+# ---------------------------------------------------------------------------
+# Tuning decisions
+# ---------------------------------------------------------------------------
+
+
+def test_fake_timer_determinism(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+    d, n = 64, 256
+    cands = pair_candidates(d, n=n)
+    table = {c: 1.0 + ((7 * c[0] + c[1]) % 13) for c in cands}
+    want = min(table, key=lambda c: table[c])
+    picks = []
+    for _ in range(2):  # fresh tuner each time: decided from cache/timer only
+        tuner = Autotuner(timer=_fake_timer_table(table))
+        picks.append(tuner.resolve_pair("flash_fwd", d=d, n=n))
+    assert picks[0] == picks[1] == want
+
+
+def test_pruner_never_drops_measured_best(monkeypatch):
+    """With a measurement consistent with the analytic objective, the top-K
+    analytic pruning keeps the candidate that full-space measurement would
+    pick — the pruner only cuts cost, not quality."""
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+    for d in (64, 128, 256):
+        for g in (1, 2):
+            n = 512
+            timer = _analytic_fake_timer(d, n)
+            nb = seq_bucket(n)
+            full = {
+                (min(l, nb), min(m, nb))
+                for l, m, _ in enumerate_block_sizes(
+                    d, group_size=g, max_l=1024, max_m=1024
+                )
+            }
+            best_full = min(full, key=lambda c: timer(None, c))
+            pruned = pair_candidates(d, n=n, group_size=g)
+            assert best_full in pruned, (d, g, best_full, pruned)
+            tuner = Autotuner(timer=timer)
+            pick = tuner.resolve_pair("flash_fwd", d=d, n=n, group_size=g)
+            assert pick == best_full
+
+
+def test_candidates_include_default_and_fit(monkeypatch):
+    for d in (64, 256):
+        cands = pair_candidates(d, n=4096)
+        assert (128, 128) in cands
+        assert all(l % 128 == 0 and m % 128 == 0 for l, m in cands)
+    assert all(bk <= 256 for bk in decode_candidates(200))
+
+
+def test_modes(monkeypatch):
+    tuner = Autotuner(timer=_fake_timer_table({}))
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    assert tuner.resolve_pair("flash_fwd", d=64, n=1024) == (128, 128)
+    assert tuner.resolve_decode(d=64, n=1024) == 128
+    monkeypatch.setenv("REPRO_TUNE", "analytic")
+    l, m = tuner.resolve_pair("flash_fwd", d=64, n=4096)
+    assert l >= 128 and m >= 128 and l % 128 == 0 and m % 128 == 0
+    # the analytic rule at d=64 picks a larger-than-default tile
+    assert (l, m) != (128, 128)
+    monkeypatch.setenv("REPRO_TUNE", "bogus")
+    with pytest.raises(ValueError):
+        tuner.resolve_pair("flash_fwd", d=64, n=128)
+
+
+def test_measured_entry_cached_and_reused(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+    path = str(tmp_path / "c.json")
+    calls = []
+
+    def timer(run_fn, cand):
+        calls.append(cand)
+        return float(sum(cand) if isinstance(cand, tuple) else cand)
+
+    t1 = Autotuner(cache=TuneCache(path), timer=timer)
+    p1 = t1.resolve_pair("flash_fwd", d=64, n=256)
+    n_calls = len(calls)
+    assert n_calls > 0
+    # second tuner, same cache file: pure lookup, no timing
+    t2 = Autotuner(cache=TuneCache(path), timer=timer)
+    assert t2.resolve_pair("flash_fwd", d=64, n=256) == p1
+    assert len(calls) == n_calls
+
+
+# ---------------------------------------------------------------------------
+# Numerical parity: tuned blocks change performance, never results
+# ---------------------------------------------------------------------------
+
+
+def _qkv(dtype, n=256, d=32, hq=2, hkv=1):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, hq, n, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (1, hkv, n, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (1, hkv, n, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwd_parity_default_vs_tuned(dtype):
+    q, k, v = _qkv(dtype)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    base = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    tuned = ops.flash_attention(
+        q, k, v, causal=True, blocks=BlockSizes(block_q=256, block_k=64)
+    )
+    np.testing.assert_allclose(
+        np.asarray(base, np.float32), np.asarray(tuned, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bwd_parity_default_vs_tuned(dtype):
+    q, k, v = _qkv(dtype)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+
+    def loss(blocks):
+        def f(q, k, v):
+            return ops.flash_attention(
+                q, k, v, causal=True, blocks=blocks
+            ).astype(jnp.float32).sum()
+
+        return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    g_base = loss(BlockSizes(128, 128))
+    g_tuned = loss(
+        BlockSizes(block_q=128, block_k=128, block_q_dq=64, block_k_dq=256,
+                   block_q_dkv=256, block_k_dkv=64)
+    )
+    for a, b in zip(g_base, g_tuned):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_parity_default_vs_tuned(dtype):
+    d, s = 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 2, 1, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 1, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 1, s, d), jnp.float32).astype(dtype)
+    lens = jnp.asarray([100, 256], jnp.int32)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    base = ops.decode_attention(q, k, v, lengths=lens, block_k=128)
+    tuned = ops.decode_attention(q, k, v, lengths=lens, block_k=64)
+    np.testing.assert_allclose(
+        np.asarray(base, np.float32), np.asarray(tuned, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: REPRO_TUNE=measure through attend / attend_decode
+# ---------------------------------------------------------------------------
+
+
+def test_measure_mode_end_to_end(monkeypatch, tmp_path):
+    """attend/attend_decode with block_q=None sweep, cache, and stay exact."""
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+    path = str(tmp_path / "e2e.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+
+    # fake timer that prefers the largest tiles: deterministic, no wall clock
+    def timer(run_fn, cand):
+        if isinstance(cand, tuple):
+            return 1.0 / (cand[0] * cand[1])
+        return 1.0 / cand
+
+    reset_autotuner(Autotuner(cache=TuneCache(path), timer=timer))
+
+    q, k, v = _qkv(jnp.float32, n=200, d=32)
+    cfg = AttentionConfig(impl="pallas_flash")  # block_q/block_k auto
+    out = attend(q, k, v, cfg, causal=True)
+    ref = reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5
+    )
+    # fwd-only dispatch must NOT have swept the backward kernels...
+    cache = json.load(open(path))
+    assert {e["kernel"] for e in cache.values()} == {"flash_fwd"}
+    # ...they resolve lazily when grad tracing reaches the op.
+    jax.grad(
+        lambda q: attend(q, k, v, cfg, causal=True).sum()
+    )(q)
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    qd = jax.random.normal(ks[0], (2, 2, 1, 32), jnp.float32)
+    kc = jax.random.normal(ks[1], (2, 1, 128, 32), jnp.float32)
+    vc = jax.random.normal(ks[2], (2, 1, 128, 32), jnp.float32)
+    lens = jnp.asarray([60, 128], jnp.int32)
+    od = attend_decode(qd, kc, vc, cfg, lengths=lens)
+    odr = attend_decode(
+        qd, kc, vc, AttentionConfig(impl="reference"), lengths=lens
+    )
+    np.testing.assert_allclose(
+        np.asarray(od), np.asarray(odr), atol=2e-5, rtol=2e-5
+    )
+
+    cache = json.load(open(path))
+    kernels = {e["kernel"] for e in cache.values()}
+    assert {"flash_fwd", "flash_dq", "flash_dkv", "decode"} <= kernels
+    # the fake timer prefers big tiles ⇒ the tuned fwd pick differs from 128²
+    fwd = [e for e in cache.values() if e["kernel"] == "flash_fwd"][0]
+    assert tuple(fwd["best"]) != (128, 128)
+
+    # decode split tuning is independent of a pinned fwd pair: pinning the
+    # prefill tiles still auto-resolves block_k_decode (fresh cache ⇒ the
+    # only new key is the decode one).
+    path2 = str(tmp_path / "e2e2.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path2)
+    reset_autotuner(Autotuner(cache=TuneCache(path2), timer=timer))
+    pinned = AttentionConfig(impl="pallas_flash", block_q=256, block_k=256)
+    attend_decode(qd, kc, vc, pinned, lengths=lens)
+    assert {e["kernel"] for e in json.load(open(path2)).values()} == {"decode"}
