@@ -2,6 +2,14 @@
 
 Runs in a subprocess with 8 forced host devices; the attention workload is
 sharded over a data mesh of 1/2/4/8 devices (paper: 1/2/4 GPUs) and timed.
+
+Beyond the paper, a second subprocess times **ring sequence-parallel
+attention** (distributed.ring_attention) — flash and distr — on context
+rings of 1/2/4/8 devices against the single-device kernels, emitting
+``BENCH_ring.json`` at the repo root.  On this CPU container the rows are
+interpret-mode (labelled via ``backend_info``): the point is exercising the
+ring schedule end-to-end and tracking the hop/merge overhead trend, not
+absolute kernel speed.
 """
 from __future__ import annotations
 
@@ -12,6 +20,10 @@ import sys
 import textwrap
 
 from benchmarks.common import save_result
+
+BENCH_RING_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_ring.json"
+)
 
 _SCRIPT = """
 import os
@@ -50,25 +62,101 @@ print("JSON:" + json.dumps(out))
 """
 
 
-def run(smoke: bool = False) -> list[tuple]:
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    script = textwrap.dedent(_SCRIPT).format(
-        src=os.path.abspath(src),
-        n=256 if smoke else 2048,
-        ndevs=(1, 2) if smoke else (1, 2, 4, 8),
-    )
+_RING_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json, functools
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+from repro.core.distr_attention import DistrConfig
+from repro.distributed.ring_attention import (
+    ring_distr_attention, ring_flash_attention,
+)
+from repro.kernels import ops
+from benchmarks.common import backend_info, timeit
+
+B, Hq, Hkv, N, D = 1, 4, 2, {n}, 64
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (B, Hq, N, D), jnp.float32)
+k = jax.random.normal(ks[1], (B, Hkv, N, D), jnp.float32)
+v = jax.random.normal(ks[2], (B, Hkv, N, D), jnp.float32)
+dcfg = DistrConfig(group_size=2)
+
+t_flash1 = timeit(jax.jit(functools.partial(ops.flash_attention, causal=True)),
+                  q, k, v, warmup=1, iters=3)
+t_distr1 = timeit(
+    jax.jit(lambda q, k, v: ops.distr_attention(q, k, v, dcfg, causal=True)),
+    q, k, v, warmup=1, iters=3)
+out = []
+for ndev in {ndevs}:
+    mesh = jax.sharding.Mesh(jax.devices()[:ndev], ("context",))
+    _, hops = ring_flash_attention(q, k, v, mesh, causal=True,
+                                   return_hops=True)
+    t_f = timeit(
+        jax.jit(lambda q, k, v: ring_flash_attention(
+            q, k, v, mesh, causal=True)), q, k, v, warmup=1, iters=3)
+    t_d = timeit(
+        jax.jit(lambda q, k, v: ring_distr_attention(
+            q, k, v, dcfg, mesh, causal=True)), q, k, v, warmup=1, iters=3)
+    out.append(dict(devices=ndev, seq=N, causal=True, hops=int(hops),
+                    ring_flash_us=t_f, ring_distr_us=t_d,
+                    single_flash_us=t_flash1, single_distr_us=t_distr1,
+                    **backend_info()))
+print("RINGJSON:" + json.dumps(out))
+"""
+
+
+def _run_sub(script: str, marker: str, rows: list, label: str):
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, timeout=560)
-    rows = []
+                         text=True, timeout=1100)
     if res.returncode != 0:
-        rows.append(("multidevice/FAILED", 0.0, res.stderr[-200:]))
-        return rows
-    records = json.loads(res.stdout.split("JSON:")[1])
-    if not smoke:
-        save_result("multidevice", records)
-    for r in records:
-        rows.append((
-            f"multidevice/devices={r['devices']}", r["distr_us"],
-            f"flash={r['flash_us']:.0f}us speedup={r['speedup']:.2f}x",
-        ))
+        rows.append((f"{label}/FAILED", 0.0, res.stderr[-200:]))
+        return None
+    return json.loads(res.stdout.split(marker)[1])
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    rows: list[tuple] = []
+    records = _run_sub(
+        textwrap.dedent(_SCRIPT).format(
+            src=src,
+            n=256 if smoke else 2048,
+            ndevs=(1, 2) if smoke else (1, 2, 4, 8),
+        ),
+        "JSON:", rows, "multidevice",
+    )
+    if records is not None:
+        if not smoke:
+            save_result("multidevice", records)
+        for r in records:
+            rows.append((
+                f"multidevice/devices={r['devices']}", r["distr_us"],
+                f"flash={r['flash_us']:.0f}us speedup={r['speedup']:.2f}x",
+            ))
+
+    ring = _run_sub(
+        textwrap.dedent(_RING_SCRIPT).format(
+            src=src,
+            n=256 if smoke else 1024,
+            ndevs=(1, 2) if smoke else (1, 2, 4, 8),
+        ),
+        "RINGJSON:", rows, "multidevice/ring",
+    )
+    if ring is not None:
+        if not smoke:
+            save_result("ring", ring)
+            with open(os.path.abspath(BENCH_RING_PATH), "w") as f:
+                json.dump(ring, f, indent=1)
+        for r in ring:
+            mode = "interpret" if r["interpret"] else "compiled"
+            rows.append((
+                f"multidevice/ring/devices={r['devices']}",
+                r["ring_flash_us"],
+                f"distr={r['ring_distr_us']:.0f}us "
+                f"single_flash={r['single_flash_us']:.0f}us "
+                f"hops={r['hops']} backend={r['backend']}:{mode}",
+            ))
     return rows

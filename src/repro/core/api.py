@@ -16,6 +16,11 @@ The Pallas paths are differentiable (``kernels.ops`` wires ``custom_vjp``
 to the fused FA-2-style backward kernels), so training under
 ``pallas_flash`` / ``pallas_distr`` runs the kernel path end-to-end instead
 of the ``jax.checkpoint``-scan XLA fallback (DESIGN.md §Backward).
+
+They also scale past one device's HBM: with ``context_axis`` set and an
+active mesh carrying that axis, dispatch goes to
+``distributed.ring_attention`` — ring sequence-parallel attention over the
+same kernels (DESIGN.md §Context parallelism).
 """
 from __future__ import annotations
 
@@ -61,12 +66,68 @@ class AttentionConfig:
     # Pallas interpret mode: None = auto (compiled on TPU, interpreter on
     # the CPU container); set explicitly only to force one mode.
     interpret: bool | None = None
+    # Context parallelism: name of the mesh axis the sequence dimension is
+    # ring-sharded over.  When set and the active mesh has that axis (size
+    # > 1), the Pallas impls dispatch to distributed.ring_attention — Q/K/V
+    # shard on the sequence axis, KV rotates hop-by-hop, partial (O, LSE)
+    # merge online — so max sequence length scales with ring size instead
+    # of HBM per chip.  Short sequences (< ring size × 128) stay on one
+    # device: a ring hop is not worth its ppermute below a full lane tile.
+    # For model-integrated use, name the mesh axis
+    # distributed.sharding.CONTEXT_AXIS ("context"): the built-in sharding
+    # rules special-case that literal to keep the batch dim off the ring.
+    context_axis: str | None = None
     # Beyond-paper: serve-side fused-K̂ decode cache under a static
     # permutation (see serve.kv_cache); cuts K-cache read bytes by 1/G*.
     distr_decode: bool = False
 
     def with_impl(self, impl: str) -> "AttentionConfig":
         return replace(self, impl=impl)
+
+
+def _active_context_mesh(context_axis: str | None):
+    """The active mesh when it carries a >1-sized ``context_axis``, else
+    None (no mesh set, axis missing, or trivially sized — the single-device
+    paths apply)."""
+    if not context_axis:
+        return None
+    from repro.utils.jax_compat import get_abstract_mesh
+
+    mesh = get_abstract_mesh()
+    if mesh is None or getattr(mesh, "empty", False):
+        return None
+    if context_axis not in mesh.axis_names:
+        return None
+    return mesh if int(mesh.shape[context_axis]) > 1 else None
+
+
+def _ring_dispatch(cfg: AttentionConfig, q, k, v, *, causal, scale, kv_mask):
+    """Route to distributed.ring_attention when context parallelism applies;
+    returns None to fall through to the single-device paths."""
+    if cfg.impl not in ("pallas_flash", "pallas_distr") or kv_mask is not None:
+        return None
+    if q.shape[2] != k.shape[2]:  # ring is self-attention only (cross-attn
+        return None  # keeps the single-device kernels)
+    mesh = _active_context_mesh(cfg.context_axis)
+    if mesh is None:
+        return None
+    from repro.distributed import ring_attention as ring
+
+    p = int(mesh.shape[cfg.context_axis])
+    if q.shape[2] < p * ring.MIN_RING_SHARD:
+        return None
+    if cfg.impl == "pallas_flash":
+        blocks = None
+        if cfg.block_q is not None or cfg.block_k is not None:
+            blocks = BlockSizes.from_pair(cfg.block_q or 128, cfg.block_k or 128)
+        return ring.ring_flash_attention(
+            q, k, v, mesh, axis=cfg.context_axis, causal=causal, scale=scale,
+            blocks=blocks, interpret=cfg.interpret,
+        )
+    return ring.ring_distr_attention(
+        q, k, v, cfg.distr, mesh, axis=cfg.context_axis, causal=causal,
+        scale=scale, interpret=cfg.interpret,
+    )
 
 
 def resolve_attention_blocks(
@@ -90,8 +151,27 @@ def resolve_attention_blocks(
     resolves the backward dQ/dKV keys in measure mode; forward-only
     dispatch leaves them to resolve lazily at backward-trace time.
     Shape-only — safe to call while tracing.
+
+    Under context parallelism (``cfg.context_axis`` naming an active mesh
+    axis) the tuner key is *per-shard*: the sequence bucket is the length
+    one ring device actually streams, ``context_shard_len(n, P)``, not the
+    global N — matching what distributed.ring_attention resolves at
+    dispatch.
     """
     n_k = n_k if n_k is not None else n_q
+    mesh = _active_context_mesh(cfg.context_axis)
+    if mesh is not None and cfg.impl.startswith("pallas") and n_q == n_k:
+        # Mirror the _ring_dispatch guards (self-attention, long enough to
+        # fill a shard per device): warming a bucket the dispatch will
+        # never route to the ring would leave the *real* bucket cold and
+        # the measure-mode sweep would fire inside the first jitted step.
+        from repro.distributed.ring_attention import (
+            MIN_RING_SHARD, context_shard_len,
+        )
+
+        p = int(mesh.shape[cfg.context_axis])
+        if n_q >= p * MIN_RING_SHARD:
+            n_q = n_k = context_shard_len(n_q, p)
     if cfg.impl in ("distr", "pallas_distr"):
         # The distr dispatch reads DistrConfig's blocks, not ours — resolve
         # (or pass through) those, so warm-up and launcher logs report the
@@ -100,6 +180,21 @@ def resolve_attention_blocks(
             d, max(n_q, n_k), dtype=dtype, causal=causal,
             xla=(cfg.impl == "distr"), interpret=cfg.interpret,
         )
+        if bwd and cfg.impl == "pallas_distr":
+            # Training warm-up: pre-resolve (measure mode: sweep + persist)
+            # the backward block_k keys too — block_q stays pinned as the
+            # LSH grouping granularity.
+            from repro.tune.autotune import get_autotuner, tune_mode
+
+            if dcfg.block_k_bwd is None and tune_mode() == "measure":
+                tuner = get_autotuner()
+                kw = dict(
+                    block_q=dcfg.block_q, d=d, n=max(n_q, n_k), dtype=dtype,
+                    group_size=dcfg.group_size, causal=causal,
+                    interpret=cfg.interpret, fwd_block_k=dcfg.block_k,
+                )
+                tuner.resolve_distr_bwd("distr_dq", **kw)
+                tuner.resolve_distr_bwd("distr_dkv", **kw)
         return BlockSizes.from_pair(dcfg.block_q, dcfg.block_k)
     if cfg.block_q is not None or cfg.block_k is not None:
         # Fully pinned, or a partial pin (free dim → static default).
@@ -129,7 +224,17 @@ def attend(
     """Multi-head attention with the configured implementation.
 
     q: (B, Hq, N, d);  k, v: (B, Hkv, Nk, d).
+
+    When ``cfg.context_axis`` names an axis of the active mesh, the Pallas
+    impls run ring sequence-parallel (distributed.ring_attention): Q/K/V
+    shard over the sequence axis, KV rotates around the ring, and partial
+    (O, LSE) merge online — the same kernels, one shard per device.
     """
+    ring_out = _ring_dispatch(
+        cfg, q, k, v, causal=causal, scale=scale, kv_mask=kv_mask
+    )
+    if ring_out is not None:
+        return ring_out
     if cfg.impl == "reference":
         return reference_attention(q, k, v, causal=causal, scale=scale, kv_mask=kv_mask)
     if cfg.impl == "xla_flash":

@@ -33,6 +33,9 @@ class DistrConfig:
       resolved by the block-size autotuner (repro.tune) at dispatch; note
       block_q is also the LSH permutation granularity, so tuning it trades
       grouping locality against tile efficiency.
+    block_k_bwd: KV tile of the backward dQ̂/dKV kernels (``None`` = fwd
+      block_k, or the independently-measured pick under REPRO_TUNE=measure;
+      block_q stays pinned in the backward — it defines the grouping).
     estimator: "sample" (paper) | "mean" (beyond-paper variant).
     shared_kv_perm: beyond-paper — derive one permutation per KV group from
       the mean of its query heads, so fused K̂ is computed once per KV head
@@ -43,6 +46,12 @@ class DistrConfig:
     group_size: int = 2
     block_q: int | None = 128
     block_k: int | None = 128
+    # Backward KV tile for the dQ̂/dKV kernels.  ``None`` = auto: the fwd
+    # block_k, or — under REPRO_TUNE=measure — an independently-measured
+    # pick per backward kernel.  block_q has no backward override on
+    # purpose: it is the LSH grouping granularity and must stay pinned
+    # (asserted in tune/autotune.py).
+    block_k_bwd: int | None = None
     estimator: str = "sample"
     shared_kv_perm: bool = False
     proj_seed: int = 0

@@ -1,4 +1,5 @@
-"""Distributed runtime: sharding rules, explicit collectives, pipeline PP."""
-from repro.distributed import collectives, pipeline, sharding
+"""Distributed runtime: sharding rules, explicit collectives, pipeline PP,
+and ring sequence-parallel (context-parallel) attention."""
+from repro.distributed import collectives, pipeline, ring_attention, sharding
 
-__all__ = ["collectives", "pipeline", "sharding"]
+__all__ = ["collectives", "pipeline", "ring_attention", "sharding"]

@@ -45,10 +45,14 @@ def pipeline_apply(
 
         def tick(carry, t):
             outs, cur = carry
-            # Stage 0 injects microbatch t while t < M.
+            # Stage 0 injects microbatch t while t < M; drain ticks (t >= M)
+            # inject zeros — re-injecting the clamped index M-1 would make
+            # every stage recompute the final microbatch S-1 extra times
+            # (pure waste: those late copies can never reach the emit tick).
             inj = jax.lax.dynamic_index_in_dim(
                 x_local, jnp.minimum(t, m - 1), axis=0, keepdims=False
             )
+            inj = jnp.where(t < m, inj, jnp.zeros_like(inj))
             cur = jnp.where(stage == 0, inj, cur)
             y = stage_fn(params_stage, cur)
             # Last stage emits microbatch t - (S-1).

@@ -28,13 +28,27 @@ LOGICAL_RULES = {
 
 MIN_FSDP_DIM = 1024
 
+# The reserved mesh-axis name for ring sequence-parallel attention
+# (distributed.ring_attention).  The ring functions themselves accept any
+# axis name, but the built-in sharding rules — dp_axes here and the
+# "data"/"seq" expansion in models.layers.constrain — special-case this
+# literal: model-integrated training/serving must name the mesh axis
+# CONTEXT_AXIS (and set AttentionConfig.context_axis to it) or the batch
+# dim would shard over the ring and every layer would re-gather it.
+CONTEXT_AXIS = "context"
+
 # Parameter subtrees that are layer-stacked (leading dim = scan axis; never
 # FSDP-shard it — scan would reshard every step).
 STACKED_KEYS = ("blocks", "dense_blocks", "enc_blocks", "groups", "tail")
 
 
 def dp_axes(mesh) -> tuple[str, ...]:
-    return tuple(a for a in mesh.axis_names if a != "model")
+    """Axes the batch dimension shards over: everything except "model" (TP)
+    and CONTEXT_AXIS (sequence-sharded ring attention — the batch must stay
+    whole across it or each ring device would hold a different batch)."""
+    return tuple(
+        a for a in mesh.axis_names if a not in ("model", CONTEXT_AXIS)
+    )
 
 
 def data_axis_size(mesh) -> int:

@@ -254,23 +254,24 @@ def flash_attention(
 # ---------------------------------------------------------------------------
 
 
-def _distr_fwd_impl(cfg, causal, scale, interpret, q, k, v, with_residuals):
-    """Returns (out, lse, q_hat_flat, perms) — the kernel-path residuals
-    (lse is None on the primal path, which skips emitting it)."""
-    b, hq, n, d = q.shape
-    hkv = k.shape[1]
-    q_per_kv = hq // hkv
+def distr_stage1(cfg, qp, scale, *, hkv: int | None = None):
+    """The paper's lightweight pre-kernel stage (§4.8) on a
+    ``block_q``-padded q (B, Hq, N_pad, d): per-Q-block LSH permutations +
+    Q̂ sampling, with the softmax scale pre-folded.  Returns
+    (q_hat (B, Hq, N_pad, d/G*), perms (B, Hq, nq, d)).  ``hkv`` enables
+    the shared-KV-perm variant (one permutation per KV group, hashed from
+    the group's mean query block).  The one implementation for the
+    single-device op *and* the ring (distributed.ring_attention) — the
+    grouping decision must never diverge between them."""
+    b, hq, n_pad, d = qp.shape
     g = cfg.group_size
-
-    qp, n_orig = _pad_seq(q, cfg.block_q)
-    kp, kv_len = _pad_seq(k, cfg.block_k)
-    vp, _ = _pad_seq(v, cfg.block_k)
-    n_pad = qp.shape[2]
     nq_blocks = n_pad // cfg.block_q
 
-    # Stage 1 (outside kernel, XLA): LSH permutations per Q block + sampling.
     proj = lsh.make_projection(jax.random.PRNGKey(cfg.proj_seed), cfg.block_q)
     if cfg.shared_kv_perm:
+        if hkv is None:
+            raise ValueError("shared_kv_perm needs the KV head count")
+        q_per_kv = hq // hkv
         q_mean = qp.reshape(b, hkv, q_per_kv, n_pad, d).mean(axis=2)
         perms = compute_block_permutations(q_mean, cfg, proj)  # (b, hkv, nq, d)
         perms = jnp.broadcast_to(
@@ -289,7 +290,26 @@ def _distr_fwd_impl(cfg, causal, scale, interpret, q, k, v, with_residuals):
         q_hat = grouping.mean_columns(q_blocks, perms, g)
     else:
         raise ValueError(f"unknown estimator {cfg.estimator!r}")
-    q_hat = (q_hat * scale).reshape(b * hq, n_pad, d // g).astype(q.dtype)
+    q_hat = (q_hat * scale).reshape(b, hq, n_pad, d // g).astype(qp.dtype)
+    return q_hat, perms
+
+
+def _distr_fwd_impl(cfg, causal, scale, interpret, q, k, v, with_residuals):
+    """Returns (out, lse, q_hat_flat, perms) — the kernel-path residuals
+    (lse is None on the primal path, which skips emitting it)."""
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    q_per_kv = hq // hkv
+    g = cfg.group_size
+
+    qp, n_orig = _pad_seq(q, cfg.block_q)
+    kp, kv_len = _pad_seq(k, cfg.block_k)
+    vp, _ = _pad_seq(v, cfg.block_k)
+    n_pad = qp.shape[2]
+    nq_blocks = n_pad // cfg.block_q
+
+    q_hat, perms = distr_stage1(cfg, qp, scale, hkv=hkv)
+    q_hat = q_hat.reshape(b * hq, n_pad, d // g)
 
     res = distr_attention_kernel_call(
         q_hat,
@@ -319,6 +339,60 @@ def _distr_vjp_fwd(cfg, causal, scale, interpret, q, k, v):
     return out, (q, k, v, out, lse, q_hat, perms)
 
 
+def distr_dq_from_dq_hat(estimator, dq_hat, perms, *, block_q, group_size,
+                         scale):
+    """dQ̂ → dQ: transpose of the Q̂ sampling/mean gather with the
+    forward's pre-scale folded in.  dq_hat: (B, Hq, N_pad, d/G*); perms:
+    (B, Hq, nq, d) → (B, Hq, N_pad, d) f32.  Shared by the single-device
+    ``custom_vjp`` and the ring backward (distributed.ring_attention) so
+    the estimator chain rule cannot diverge between them."""
+    b, hq, n_pad, dg = dq_hat.shape
+    d = perms.shape[-1]
+    nq_blocks = n_pad // block_q
+    sample_fn = (
+        grouping.sample_columns if estimator == "sample"
+        else grouping.mean_columns
+    )
+    blocks_ = (
+        dq_hat.astype(jnp.float32).reshape(b, hq, nq_blocks, block_q, dg)
+        * scale
+    )
+    (dq_blocks,) = jax.linear_transpose(
+        lambda t: sample_fn(t, perms, group_size),
+        jax.ShapeDtypeStruct(
+            (b, hq, nq_blocks, block_q, d), jnp.float32
+        ),
+    )(blocks_)
+    return dq_blocks.reshape(b, hq, n_pad, d)
+
+
+def resolve_distr_bwd_blocks(cfg, *, d, n, dtype, causal, interpret):
+    """Backward KV tiles ``(bk_dq, bk_dkv)`` for the distr kernels
+    (mirrors ``_resolve_bwd_blocks``).  ``block_q`` is *never* resolved
+    here: it is the LSH grouping granularity shared with the forward and
+    the saved permutations, and stays pinned (asserted in
+    ``Autotuner.resolve_distr_bwd``).  Explicit ``cfg.block_k_bwd`` wins;
+    outside measure mode the fwd ``block_k`` carries over.  The one
+    resolver for both the single-device custom_vjp (lazy, at
+    backward-trace time) and the ring backward (eager, at dispatch, with
+    ``n`` = the per-device shard)."""
+    if cfg.block_k_bwd is not None:
+        return cfg.block_k_bwd, cfg.block_k_bwd
+    from repro.tune.autotune import get_autotuner, tune_mode
+
+    if tune_mode() != "measure":
+        return cfg.block_k, cfg.block_k
+    tuner = get_autotuner()
+    kw = dict(
+        block_q=cfg.block_q, d=d, n=n, dtype=dtype, group_size=cfg.group_size,
+        causal=causal, interpret=interpret, fwd_block_k=cfg.block_k,
+    )
+    return (
+        tuner.resolve_distr_bwd("distr_dq", **kw)[1],
+        tuner.resolve_distr_bwd("distr_dkv", **kw)[1],
+    )
+
+
 def _distr_vjp_bwd(cfg, causal, scale, interpret, res, do):
     q, k, v, o, lse, q_hat, perms = res
     b, hq, n, d = q.shape
@@ -326,15 +400,24 @@ def _distr_vjp_bwd(cfg, causal, scale, interpret, res, do):
     q_per_kv = hq // hkv
     g = cfg.group_size
     dg = d // g
+    kv_len = k.shape[2]
+    bk_dq, bk_dkv = resolve_distr_bwd_blocks(
+        cfg, d=d, n=max(n, kv_len), dtype=_dtype_str(q), causal=causal,
+        interpret=interpret,
+    )
 
-    kp, kv_len = _pad_seq(k, cfg.block_k)
-    vp, _ = _pad_seq(v, cfg.block_k)
     dop, n_orig = _pad_seq(do.astype(q.dtype), cfg.block_q)
     op, _ = _pad_seq(o, cfg.block_q)
     n_pad = dop.shape[2]
     nq_blocks = n_pad // cfg.block_q
 
-    kf, vf = _flatten_heads(kp), _flatten_heads(vp)
+    def kv_side(block):
+        kp, _ = _pad_seq(k, block)
+        vp, _ = _pad_seq(v, block)
+        return _flatten_heads(kp), _flatten_heads(vp)
+
+    kf1, vf1 = kv_side(bk_dq)
+    kf2, vf2 = (kf1, vf1) if bk_dkv == bk_dq else kv_side(bk_dkv)
     dof, of = _flatten_heads(dop), _flatten_heads(op)
     perm_f = perms.reshape(b * hq, nq_blocks, d)
     # A permutation's inverse is its argsort; the dkv kernel turns the
@@ -343,30 +426,23 @@ def _distr_vjp_bwd(cfg, causal, scale, interpret, res, do):
 
     delta = bwd.delta_kernel_call(of, dof, block_q=cfg.block_q, interpret=interpret)
     dq_hat = bwd.distr_dq_kernel_call(
-        q_hat, kf, vf, perm_f, dof, lse, delta,
+        q_hat, kf1, vf1, perm_f, dof, lse, delta,
         q_per_kv=q_per_kv, causal=causal, group_size=g,
-        block_q=cfg.block_q, block_k=cfg.block_k, kv_len=kv_len,
+        block_q=cfg.block_q, block_k=bk_dq, kv_len=kv_len,
         interpret=interpret,
     )
     dk_h, dv_h = bwd.distr_dkv_kernel_call(
-        q_hat, kf, vf, perm_f, inv_perm_f, dof, lse, delta,
+        q_hat, kf2, vf2, perm_f, inv_perm_f, dof, lse, delta,
         q_per_kv=q_per_kv, causal=causal, group_size=g,
-        block_q=cfg.block_q, block_k=cfg.block_k, kv_len=kv_len,
+        block_q=cfg.block_q, block_k=bk_dkv, kv_len=kv_len,
         interpret=interpret,
     )
 
-    # dQ̂ → dQ: transpose of the sampling/mean gather (scatter into the
-    # sampled columns), with the forward's 1/sqrt(d) pre-scale folded in.
-    sample_fn = (
-        grouping.sample_columns if cfg.estimator == "sample"
-        else grouping.mean_columns
+    dq_full = distr_dq_from_dq_hat(
+        cfg.estimator, dq_hat.reshape(b, hq, n_pad, dg), perms,
+        block_q=cfg.block_q, group_size=g, scale=scale,
     )
-    dq_hat_blocks = dq_hat.reshape(b, hq, nq_blocks, cfg.block_q, dg) * scale
-    (dq_blocks,) = jax.linear_transpose(
-        lambda t: sample_fn(t, perms, g),
-        jax.ShapeDtypeStruct((b, hq, nq_blocks, cfg.block_q, d), jnp.float32),
-    )(dq_hat_blocks)
-    dq = dq_blocks.reshape(b, hq, n_pad, d)[:, :, :n_orig, :].astype(q.dtype)
+    dq = dq_full[:, :, :n_orig, :].astype(q.dtype)
     dk = _gqa_sum(dk_h, b, hkv, q_per_kv, kv_len).astype(k.dtype)
     dv = _gqa_sum(dv_h, b, hkv, q_per_kv, kv_len).astype(v.dtype)
     return dq, dk, dv

@@ -29,8 +29,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat_make_mesh(shape, axes)
 
 
-def make_host_mesh(model_parallel: int = 1):
-    """Mesh over whatever devices exist (tests / examples / CPU)."""
+def make_host_mesh(model_parallel: int = 1, context_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / examples / CPU).
+
+    ``context_parallel > 1`` adds a "context" axis for ring
+    sequence-parallel attention (distributed.ring_attention): the sequence
+    dimension shards over it, so it is *not* a data-parallel axis —
+    sharding rules (distributed.sharding, models.layers.constrain) exclude
+    it from batch-dim expansion."""
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    if n % (model_parallel * context_parallel):
+        raise ValueError(
+            f"{n} device(s) cannot host model_parallel={model_parallel} × "
+            f"context_parallel={context_parallel} (need a divisor of the "
+            f"device count)"
+        )
+    if context_parallel > 1:
+        return compat_make_mesh(
+            (n // (model_parallel * context_parallel), context_parallel,
+             model_parallel),
+            ("data", "context", "model"),
+        )
     return compat_make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -38,6 +38,12 @@ def main() -> None:
     ap.add_argument("--data", default=None,
                     help="glob of .bin token shards (default: synthetic)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--context-parallel", type=int, default=1,
+                    help="ring sequence-parallel attention degree: shards "
+                         "the sequence axis over a 'context' mesh axis "
+                         "(distributed.ring_attention), so max trainable "
+                         "sequence length scales with this instead of HBM "
+                         "per chip")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tune", choices=["off", "analytic", "measure"],
                     default=None,
@@ -51,19 +57,35 @@ def main() -> None:
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.impl:
         cfg = cfg.replace(attention=cfg.attention.with_impl(args.impl))
+    if args.context_parallel > 1:
+        from dataclasses import replace as dc_replace
+
+        cfg = cfg.replace(
+            attention=dc_replace(cfg.attention, context_axis="context")
+        )
+
+    mesh = None
+    if len(jax.devices()) > 1 or args.context_parallel > 1:
+        mesh = make_host_mesh(args.model_parallel, args.context_parallel)
+        print(f"[train] mesh: {dict(mesh.shape)}")
 
     # Resolve (and under measure mode, sweep + persist) the training-shape
     # attention blocks up front, so the first jitted step never hides a
-    # timing run.  Explicit config ints pass through untouched.
+    # timing run.  Explicit config ints pass through untouched.  Under the
+    # mesh context the tuner keys go per-shard when context parallelism is
+    # on (the ring streams one shard per device, not the global sequence).
+    from repro.utils.jax_compat import maybe_set_mesh
+
     acfg = cfg.attention
     if acfg.impl != "reference" and (acfg.block_q is None or acfg.block_k is None):
         from repro.core.api import resolve_attention_blocks
 
-        blocks = resolve_attention_blocks(
-            acfg, d=cfg.head_dim_, n_q=args.seq,
-            dtype="bfloat16" if cfg.compute_dtype == "bfloat16" else "float32",
-            causal=True, bwd=True,  # training traces the backward kernels
-        )
+        with maybe_set_mesh(mesh):
+            blocks = resolve_attention_blocks(
+                acfg, d=cfg.head_dim_, n_q=args.seq,
+                dtype="bfloat16" if cfg.compute_dtype == "bfloat16" else "float32",
+                causal=True, bwd=True,  # training traces the backward kernels
+            )
         print(f"[train] attention blocks ({os.environ.get('REPRO_TUNE', 'off')}): "
               f"{blocks}")
 
@@ -80,11 +102,6 @@ def main() -> None:
         data = BinaryShardData(sorted(glob.glob(args.data)), args.batch, args.seq)
     else:
         data = SyntheticLMData(cfg.vocab, args.batch, args.seq, seed=args.seed)
-
-    mesh = None
-    if len(jax.devices()) > 1:
-        mesh = make_host_mesh(args.model_parallel)
-        print(f"[train] mesh: {dict(mesh.shape)}")
 
     os.makedirs(args.workdir, exist_ok=True)
     trainer = Trainer(cfg, opt_cfg, data, workdir=args.workdir, mesh=mesh,

@@ -30,7 +30,10 @@ def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
 def _constrain_bhnd(x: jnp.ndarray, attn_shard: str) -> jnp.ndarray:
     if attn_shard == "seq":
         return constrain(x, "data", None, "model", None)
-    return constrain(x, "data", "model", None, None)
+    # Heads over TP; the sequence dim rides the "context" ring axis when
+    # the mesh has one (layers.constrain maps "seq" → "context" | None), so
+    # activations arrive at the ring attention already sequence-sharded.
+    return constrain(x, "data", "model", "seq", None)
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,9 @@ def constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
 
     ``"data"`` entries denote *batch* dims and expand to every non-"model"
     mesh axis, so the same model code data-parallelises over the extra "pod"
-    axis of the multi-pod mesh.
+    axis of the multi-pod mesh.  The "context" axis (ring sequence-parallel
+    attention) is excluded: the sequence dim shards over it, never the
+    batch.
     """
     try:
         from repro.utils.jax_compat import get_abstract_mesh
@@ -29,9 +31,16 @@ def constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
         mesh = get_abstract_mesh()
         if mesh is None or mesh.empty or not mesh.axis_names:
             return x
-        dp = tuple(a for a in mesh.axis_names if a != "model")
+        from repro.distributed.sharding import CONTEXT_AXIS
+
+        dp = tuple(
+            a for a in mesh.axis_names if a not in ("model", CONTEXT_AXIS)
+        )
+        # "seq" entries denote the sequence dim: sharded over the reserved
+        # context axis when the mesh rings it, replicated otherwise.
+        ctx = CONTEXT_AXIS if CONTEXT_AXIS in mesh.axis_names else None
         expanded = tuple(
-            (dp if s == "data" else s) for s in spec
+            (dp if s == "data" else ctx if s == "seq" else s) for s in spec
         )
         return jax.lax.with_sharding_constraint(
             x, jax.sharding.PartitionSpec(*expanded)

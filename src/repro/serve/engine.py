@@ -30,6 +30,7 @@ from repro.serve import kv_cache
 from repro.serve.sampler import sample
 from repro.serve.serve_step import make_decode_step, make_prefill
 from repro.tune.autotune import warm_engine
+from repro.utils.jax_compat import maybe_set_mesh
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -51,7 +52,13 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, *, max_slots: int = 8, max_len: int = 512,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0, mesh=None):
+        """``mesh``: optional device mesh.  When it carries the axis named
+        by ``cfg.attention.context_axis``, long-prompt prefill (sequence ≥
+        ring size × 128) runs ring sequence-parallel attention
+        (distributed.ring_attention) — prompt length then scales with ring
+        size instead of one device's HBM.  Decode stays single-device: a
+        one-token query never fills a ring shard."""
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "engine drives decoder-only archs; use serve_step directly "
@@ -62,13 +69,16 @@ class ServeEngine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.temperature = temperature
+        self.mesh = mesh
         self._uid = itertools.count()
         self._rng = jax.random.PRNGKey(seed)
 
         # Resolve every block-size key this engine's steps will hit (prefill
         # buckets + decode split) before the first request arrives; under
-        # REPRO_TUNE=measure the sweeps run and persist here, once.
-        self.tuned_blocks = warm_engine(cfg, max_len)
+        # REPRO_TUNE=measure the sweeps run and persist here, once.  The
+        # mesh context keys long-prompt buckets per ring shard.
+        with maybe_set_mesh(mesh):
+            self.tuned_blocks = warm_engine(cfg, max_len)
 
         self.cache = kv_cache.init_cache(cfg, max_slots, max_len)
         self.pos = jnp.zeros((max_slots,), jnp.int32)
@@ -106,9 +116,12 @@ class ServeEngine:
             bucket = min(_bucket(n), self.max_len)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :n] = req.prompt
-            logits, cache1 = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(toks)
-            )
+            # Long-prompt prefill rides the context-parallel ring when the
+            # engine has a mesh (trace-time dispatch in core.api.attend).
+            with maybe_set_mesh(self.mesh):
+                logits, cache1 = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(toks)
+                )
             # NOTE: right-padding shifts the "last" logit for padded prompts;
             # re-read the true last-position logits from position n-1 by
             # decoding from position n with the prompt's last token instead.

@@ -16,6 +16,7 @@ from repro.models import lm
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt_mod
 from repro.train.train_step import make_train_step
+from repro.utils.jax_compat import maybe_set_mesh
 
 
 class Trainer:
@@ -103,10 +104,15 @@ class Trainer:
                 batch = self.dataset.next_batch()
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
                 t0 = time.perf_counter()
-                new_params, new_opt, metrics = self._step_fn(
-                    self.params, self.opt_state, batch,
-                    jnp.asarray(self.step, jnp.int32),
-                )
+                # The mesh context is what lets trace-time dispatch see the
+                # mesh: sharding constraints in the model and the ring
+                # context-parallel attention (core.api._active_context_mesh)
+                # both read the active mesh.
+                with maybe_set_mesh(self.mesh):
+                    new_params, new_opt, metrics = self._step_fn(
+                        self.params, self.opt_state, batch,
+                        jnp.asarray(self.step, jnp.int32),
+                    )
                 loss = float(metrics["loss"])
                 skipped = float(metrics.get("skipped", 0.0)) > 0
                 self.params, self.opt_state = new_params, new_opt

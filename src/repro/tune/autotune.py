@@ -93,6 +93,32 @@ def pair_candidates(
     return cands
 
 
+def distr_bwd_candidates(
+    d: int,
+    *,
+    block_q: int,
+    n: int,
+    group_size: int,
+    top_k: int = TOP_K,
+    max_block: int = 1024,
+) -> list[int]:
+    """``block_k`` candidates for the distr backward kernels with ``block_q``
+    *pinned* (it is the LSH grouping granularity — never swept): the legal
+    m values at l = block_q from the analytic VMEM model, largest first,
+    clamped to the sequence bucket, 128 always included."""
+    nb = min(seq_bucket(n), max_block)
+    legal = enumerate_block_sizes(
+        d, group_size=group_size, max_l=max_block, max_m=max_block
+    )
+    ms = sorted(
+        {min(m, nb) for l, m, _ws in legal if l == block_q}, reverse=True
+    )[:top_k]
+    default = min(DEFAULT_BLOCK, nb)
+    if default not in ms:
+        ms.append(default)
+    return ms or [default]
+
+
 def decode_candidates(n: int, *, max_block: int = 1024) -> list[int]:
     """Split-K decode block_k candidates: power-of-two split lengths up to
     the cache capacity.  Fewer, longer splits amortise per-split overhead;
@@ -286,6 +312,60 @@ def _make_run_flash_bwd(n, d, dtype, causal, interpret, *, which: str):
     return make_run
 
 
+def _make_run_distr_bwd(n, d, dtype, causal, interpret, group_size, block_q,
+                        *, which: str):
+    """Sweep runner for the distr backward kernels: one fwd pass at the
+    pinned block_q provides (O, LSE, Q̂, perms); only ``block_k`` varies."""
+    from dataclasses import replace as dc_replace
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distr_attention import DistrConfig
+    from repro.kernels import backward as bwd
+    from repro.kernels import ops
+
+    q, k, v = _qkv(n, d, dtype)
+    scale = 1.0 / (d**0.5)
+    cfg = dc_replace(
+        DistrConfig(group_size=group_size), block_q=min(block_q, n),
+        block_k=min(DEFAULT_BLOCK, n),
+    )
+    out, lse, q_hat, perms = ops._distr_fwd_impl(  # noqa: SLF001
+        cfg, causal, scale, interpret, q, k, v, with_residuals=True,
+    )
+    do = jax.random.normal(jax.random.PRNGKey(7), out.shape, jnp.float32)
+    dof = do.reshape(-1, n, d).astype(q.dtype)
+    of = out.reshape(-1, n, d)
+    kf = k.reshape(-1, n, d)
+    vf = v.reshape(-1, n, d)
+    perm_f = perms.reshape(1, -1, d)
+    inv_perm_f = jnp.argsort(perm_f, axis=-1).astype(perm_f.dtype)
+    delta = bwd.delta_kernel_call(
+        of, dof, block_q=cfg.block_q, interpret=interpret
+    )
+
+    def make_run(cand):
+        bk = int(cand)
+        kp = _pad_axis(kf, bk, 1)
+        vp = _pad_axis(vf, bk, 1)
+        kw = dict(
+            q_per_kv=1, causal=causal, group_size=group_size,
+            block_q=cfg.block_q, block_k=bk, kv_len=n, interpret=interpret,
+        )
+        if which == "dq":
+            fn = jax.jit(lambda: bwd.distr_dq_kernel_call(
+                q_hat, kp, vp, perm_f, dof, lse, delta, **kw
+            ))
+        else:
+            fn = jax.jit(lambda: bwd.distr_dkv_kernel_call(
+                q_hat, kp, vp, perm_f, inv_perm_f, dof, lse, delta, **kw
+            ))
+        return fn
+
+    return make_run
+
+
 def _make_run_decode(n, d, dtype, interpret, group_size):
     import jax
     import jax.numpy as jnp
@@ -452,6 +532,78 @@ class Autotuner:
             kernel, d=d, n=n, dtype=dtype, group_size=group_size,
             causal=causal, interpret=interpret, make_run_for=make_run_for,
         )
+
+    def resolve_distr_bwd(
+        self,
+        kernel: str,
+        *,
+        block_q: int,
+        d: int,
+        n: int,
+        dtype: str = "float32",
+        group_size: int = 2,
+        causal: bool = False,
+        interpret: bool | None = None,
+        fwd_block_k: int | None = None,
+    ) -> tuple[int, int]:
+        """(block_q, block_k) for a distr *backward* kernel ("distr_dq" |
+        "distr_dkv").  ``block_q`` is pinned by the caller — it is the LSH
+        grouping granularity, shared with the forward and the saved
+        permutations — and only ``block_k`` is resolved: the fwd pick (or
+        128) outside measure mode, an independent sweep under it."""
+        if kernel not in ("distr_dq", "distr_dkv"):
+            raise ValueError(f"unknown distr bwd kernel {kernel!r}")
+        if interpret is None:
+            interpret = _default_interpret()
+        mode = tune_mode()
+        memo_key = (
+            mode, self.cache.path, kernel, block_q, d, seq_bucket(n), dtype,
+            group_size, causal, interpret, fwd_block_k,
+        )
+        if memo_key in self._memo:
+            pair = self._memo[memo_key]
+        elif mode != "measure":
+            bk = (
+                fwd_block_k if fwd_block_k is not None
+                else min(DEFAULT_BLOCK, seq_bucket(n))
+            )
+            pair = (block_q, bk)
+        else:
+            n_meas = self._measure_seq(n, interpret)
+            bq = min(block_q, n_meas)
+            cands = distr_bwd_candidates(
+                d, block_q=bq, n=n_meas, group_size=group_size,
+                top_k=self.top_k,
+            )
+            # The grouping pin: the backward sweep varies block_k ONLY —
+            # a refactor that starts sweeping (l, m) pairs here would
+            # silently change which columns the saved permutations group.
+            # Fail loudly on the candidate space and on the cache entry (a
+            # pair-shaped `best` means a drifted writer poisoned the key).
+            assert all(not isinstance(c, (tuple, list)) for c in cands), (
+                "distr backward candidates must be block_k scalars; "
+                "block_q is the LSH grouping granularity and stays pinned"
+            )
+            key = cache_key(
+                f"{kernel}@l={block_q}", backend=_backend_tag(interpret),
+                dtype=dtype, d=d, group_size=group_size, n=n_meas,
+                causal=causal,
+            )
+            entry = self._resolve_measured(
+                kernel, key, cands,
+                lambda: _make_run_distr_bwd(
+                    n_meas, d, dtype, causal, interpret, group_size, bq,
+                    which=kernel.split("_")[1],
+                ),
+            )
+            assert not isinstance(entry["best"], (tuple, list)), (
+                f"distr backward cache entry for {key!r} holds a (l, m) "
+                "pair — block_q must stay pinned to the LSH grouping "
+                "granularity, only block_k is tuned"
+            )
+            pair = (block_q, int(entry["best"]))
+        self._memo[memo_key] = pair
+        return pair
 
     def resolve_decode(
         self,

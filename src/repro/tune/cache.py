@@ -77,12 +77,29 @@ class TuneCache:
         path = self.path
         if self._data is None or self._loaded_from != path:
             self._loaded_from = path
+            self._data = {}
             try:
-                with open(path) as f:
+                with open(path, encoding="utf-8") as f:
                     self._data = json.load(f)
-            except (FileNotFoundError, json.JSONDecodeError):
-                self._data = {}
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                # Corrupt cache (e.g. a pre-atomic-save writer died
+                # mid-write, or torn non-UTF-8 bytes): quarantine instead
+                # of crashing the caller — engine construction warms
+                # through here, and save() must start from a clean slate.
+                self._quarantine(path)
+            except (OSError, ValueError):
+                pass
         return self._data
+
+    @staticmethod
+    def _quarantine(path: str) -> None:
+        """Move an unparseable cache aside (``path + '.corrupt'``): the bad
+        bytes stay inspectable, later saves start from a clean slate, and no
+        future load (or merge-on-save) re-parses garbage.  Never raises."""
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass
 
     def get(self, key: str) -> dict | None:
         return self._load().get(key)
@@ -100,9 +117,12 @@ class TuneCache:
         # documented warm-once pattern), so re-read and fold in entries a
         # concurrent writer persisted since our load — our own keys win.
         try:
-            with open(path) as f:
+            with open(path, encoding="utf-8") as f:
                 on_disk = json.load(f)
-        except (OSError, json.JSONDecodeError):
+        except (OSError, ValueError):
+            # ValueError covers JSONDecodeError and (torn non-UTF-8 bytes)
+            # UnicodeDecodeError: a corrupt concurrent write merges as
+            # empty and the atomic replace below overwrites it wholesale.
             on_disk = {}
         data = {**on_disk, **data}
         self._data = data
@@ -114,6 +134,11 @@ class TuneCache:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(data, f, indent=1, sort_keys=True)
+                # Durability, not just name-atomicity: without the fsync a
+                # crash shortly after os.replace can still surface a
+                # zero-length/partial file on some filesystems.
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         except BaseException:
             try:

@@ -124,6 +124,42 @@ def test_partial_pin_gets_static_default(monkeypatch):
     assert (dcfg.block_q, dcfg.block_k) == (32, 128)
 
 
+def test_corrupt_cache_quarantined(tmp_path):
+    """A torn/corrupt cache file must not crash the loader (engine
+    construction warms through it): it is moved aside to ``.corrupt`` and
+    later saves start from a clean slate."""
+    path = tmp_path / "c.json"
+    path.write_text('{"half": [128,')  # a writer died mid-write
+    c = TuneCache(str(path))
+    assert c.get("anything") is None  # tolerated, not raised
+    assert (tmp_path / "c.json.corrupt").exists()  # quarantined for autopsy
+    assert not path.exists()
+    c.put("k", {"best": [128, 128]})
+    assert json.load(open(path))["k"]["best"] == [128, 128]
+    # the quarantined bytes were preserved untouched
+    assert (tmp_path / "c.json.corrupt").read_text() == '{"half": [128,'
+
+
+def test_corrupt_cache_non_utf8_quarantined(tmp_path):
+    """Torn writes are not always valid UTF-8: those must quarantine too,
+    or the first save()'s merge-on-save re-read would crash."""
+    path = tmp_path / "c.json"
+    path.write_bytes(b"\xff\xfe{\"torn\": ")
+    c = TuneCache(str(path))
+    assert c.get("anything") is None
+    assert (tmp_path / "c.json.corrupt").exists()
+    c.put("k", {"best": [128, 128]})  # save() must not crash
+    assert json.load(open(path))["k"]["best"] == [128, 128]
+
+
+def test_cache_load_tolerates_unreadable_path(tmp_path):
+    """open() failing with an OSError other than FileNotFoundError (e.g.
+    the path is a directory) degrades to an empty cache, not a crash."""
+    d = tmp_path / "a_directory"
+    d.mkdir()
+    assert TuneCache(str(d)).get("k") is None
+
+
 def test_cache_env_override(monkeypatch, tmp_path):
     p = tmp_path / "elsewhere.json"
     monkeypatch.setenv("REPRO_TUNE_CACHE", str(p))
@@ -214,6 +250,111 @@ def test_measured_entry_cached_and_reused(monkeypatch, tmp_path):
     t2 = Autotuner(cache=TuneCache(path), timer=timer)
     assert t2.resolve_pair("flash_fwd", d=64, n=256) == p1
     assert len(calls) == n_calls
+
+
+def test_distr_bwd_block_k_pinned_block_q(monkeypatch, tmp_path):
+    """The distr backward sweeps block_k only: block_q is the LSH grouping
+    granularity and stays pinned (asserted in the resolver), in every
+    mode."""
+    from repro.tune.autotune import distr_bwd_candidates
+
+    # candidate space: only m varies, the default 128 is always present
+    cands = distr_bwd_candidates(64, block_q=128, n=512, group_size=2)
+    assert 128 in cands and len(cands) >= 2
+
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+    path = str(tmp_path / "bwd.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+
+    def timer(run_fn, cand):  # prefers the largest block_k
+        return 1.0 / (int(cand) if not isinstance(cand, tuple)
+                      else cand[0] * cand[1])
+
+    tuner = Autotuner(cache=TuneCache(path), timer=timer)
+    for kernel in ("distr_dq", "distr_dkv"):
+        bq, bk = tuner.resolve_distr_bwd(
+            kernel, block_q=128, d=64, n=256, group_size=2, causal=True,
+        )
+        assert bq == 128  # the pin
+        assert bk == max(distr_bwd_candidates(
+            64, block_q=128, n=256, group_size=2))
+    # keys are per-kernel and carry the pinned l
+    keys = set(json.load(open(path)))
+    assert any("distr_dq@l=128" in key for key in keys)
+    assert any("distr_dkv@l=128" in key for key in keys)
+
+    # off/analytic: the fwd block_k carries over, still pinned
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    assert tuner.resolve_distr_bwd(
+        "distr_dq", block_q=128, d=64, n=256, fwd_block_k=256
+    ) == (128, 256)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_distr_bwd_parity_default_vs_tuned(dtype):
+    """An independently-chosen backward block_k changes performance, never
+    gradients (explicit ``block_k_bwd`` pin exercises the same path the
+    measure-mode resolution feeds)."""
+    from dataclasses import replace as dc_replace
+
+    from repro.core.distr_attention import DistrConfig
+
+    q, k, v = _qkv(dtype, n=256, d=64)
+    base_cfg = DistrConfig(group_size=2, block_q=128, block_k=128)
+    tuned_cfg = dc_replace(base_cfg, block_k_bwd=64)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+
+    def grads(cfg):
+        return jax.grad(
+            lambda q, k, v: ops.distr_attention(
+                q, k, v, cfg, causal=True
+            ).astype(jnp.float32).sum(),
+            argnums=(0, 1, 2),
+        )(q, k, v)
+
+    for a, b in zip(grads(base_cfg), grads(tuned_cfg)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+
+def test_distr_bwd_lazy_measure_resolution(monkeypatch, tmp_path):
+    """Under REPRO_TUNE=measure, grad-tracing a distr op sweeps the
+    backward block_k keys lazily (fwd-only dispatch must not), and the
+    gradients stay exact."""
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+    path = str(tmp_path / "lazy.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+
+    def timer(run_fn, cand):
+        return float(int(cand) if not isinstance(cand, tuple)
+                     else sum(cand))
+
+    reset_autotuner(Autotuner(cache=TuneCache(path), timer=timer))
+    from repro.core.distr_attention import DistrConfig
+
+    q, k, v = _qkv(jnp.float32, n=256, d=64)
+    cfg = DistrConfig(group_size=2, block_q=128, block_k=128)
+    ops.distr_attention(q, k, v, cfg, causal=True)  # fwd only
+    kernels = {e["kernel"] for e in json.load(open(path)).values()} \
+        if os.path.exists(path) else set()
+    assert "distr_dq" not in kernels and "distr_dkv" not in kernels
+
+    g_meas = jax.grad(
+        lambda q: ops.distr_attention(q, k, v, cfg, causal=True).sum()
+    )(q)
+    kernels = {e["kernel"] for e in json.load(open(path)).values()}
+    assert {"distr_dq", "distr_dkv"} <= kernels
+
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    reset_autotuner(None)
+    g_off = jax.grad(
+        lambda q: ops.distr_attention(q, k, v, cfg, causal=True).sum()
+    )(q)
+    np.testing.assert_allclose(
+        np.asarray(g_meas), np.asarray(g_off), atol=5e-5, rtol=5e-5
+    )
 
 
 # ---------------------------------------------------------------------------
