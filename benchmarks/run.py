@@ -17,6 +17,9 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
   extra    distr_decode     — beyond-paper fused-K̂ decode cache
   §Decode  decode           — split-K flash-decoding: tokens/s + per-token
                               KV bytes vs live length (BENCH_decode.json)
+  §Paged   serving          — slot engine vs paged continuous batching at
+                              equal HBM: tokens/s + P50/P99 TTFT
+                              (BENCH_serving.json)
 
 ``--smoke`` runs every benchmark at one tiny shape (interpret mode on this
 container) without touching the persisted JSON results — a CI-grade check
@@ -42,6 +45,7 @@ BENCHES = [
     "multidevice",
     "distr_decode",
     "decode",
+    "serving",
 ]
 
 

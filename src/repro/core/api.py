@@ -290,14 +290,26 @@ def attend_decode(
     perm: jnp.ndarray | None = None,
     group_size: int = 1,
     scale: float | None = None,
+    block_tables: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Decode-path attention dispatch: one (or a few speculative) query
-    tokens against a (B, Hkv, S, d) KV cache with per-slot live ``lengths``.
+    """Decode-path attention dispatch: one (or a few speculative /
+    chunked-prefill) query tokens against a KV cache with per-slot live
+    ``lengths``.
 
-    Every impl except ``reference`` routes to the split-K flash-decoding
-    Pallas op (``kernels.ops.decode_attention``) — per-token KV traffic then
-    scales with the live length, not S.  ``reference`` keeps the pure-JAX
-    masked-softmax oracle (the parity baseline in tests).  The fused-K̂
+    Contiguous caches (``block_tables=None``): k/v are (B, Hkv, S, d)
+    slabs; every impl except ``reference`` routes to the split-K
+    flash-decoding Pallas op (``kernels.ops.decode_attention``) — per-token
+    KV traffic then scales with the live length, not S.
+
+    Paged caches (``block_tables`` (B, max_blocks) int32): k/v are shared
+    (P, Hkv, block_size, d) pools and the KV stream goes through the
+    scalar-prefetched block table (``kernels.ops.paged_decode_attention``);
+    the ``reference`` oracle gathers the table into a contiguous cache
+    first (the parity baseline in tests).  Multi-token ``q`` is banded —
+    query token ``i`` of the window sees positions
+    ``< length − (q_len − 1 − i)`` — which is what chunked prefill rides.
+
+    ``reference`` keeps the pure-JAX masked-softmax oracle.  The fused-K̂
     variant is selected by passing ``k_fused`` + ``perm`` + ``group_size``
     (see serve.kv_cache); ``k`` may be None in that case.  ``scale`` always
     refers to the full head dim (default 1/√d from V) on both paths.
@@ -307,6 +319,11 @@ def attend_decode(
             f"unknown attention impl {cfg.impl!r}; choose from {IMPLS}"
         )
     scale = float(scale) if scale is not None else 1.0 / (v.shape[-1] ** 0.5)
+    if block_tables is not None:
+        return _attend_decode_paged(
+            q, k, v, cfg, lengths=lengths, k_fused=k_fused, perm=perm,
+            group_size=group_size, scale=scale, block_tables=block_tables,
+        )
     if cfg.impl == "reference":
         from repro.core import grouping
 
@@ -331,5 +348,58 @@ def attend_decode(
     return ops.decode_attention(
         q, k, v, lengths=lengths, k_fused=k_fused, perm=perm,
         group_size=group_size, scale=scale, block_k=cfg.block_k_decode,
+        interpret=cfg.interpret,
+    )
+
+
+def _gather_paged(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """(P, Hkv, bs, d) pool + (B, max_blocks) table → (B, Hkv, max_blocks·bs,
+    d) contiguous per-request cache (the reference/oracle materialisation the
+    kernel path exists to avoid)."""
+    gathered = jnp.take(pool, block_tables, axis=0)  # (B, mb, Hkv, bs, d)
+    b, mb, hkv, bs, d = gathered.shape
+    return gathered.transpose(0, 2, 1, 3, 4).reshape(b, hkv, mb * bs, d)
+
+
+def _attend_decode_paged(q, k, v, cfg, *, lengths, k_fused, perm, group_size,
+                         scale, block_tables):
+    if cfg.impl == "reference":
+        from repro.core import grouping
+
+        bs = v.shape[2]
+        capacity = block_tables.shape[1] * bs
+        # Like the kernel op, lengths are NOT clamped to capacity: a padded
+        # window overhanging it must not shift live rows' causal bands.
+        lengths = (
+            jnp.asarray(lengths, jnp.int32)
+            if lengths is not None
+            else jnp.full((q.shape[0],), capacity, jnp.int32)
+        )
+        q_len = q.shape[2]
+        nk = capacity
+        col = jnp.arange(nk)[None, None, :]  # (1, 1, Nk)
+        row = jnp.arange(q_len)[None, :, None]  # (1, q_len, 1)
+        # Banded live window per query row (degenerate for q_len = 1).
+        band = col < (lengths[:, None, None] - (q_len - 1 - row))
+        v_c = _gather_paged(v, block_tables).astype(q.dtype)
+        if k_fused is not None:
+            q_r = grouping.sample_q_heads(q, perm, group_size)
+            k_c = _gather_paged(k_fused, block_tables).astype(q.dtype)
+        else:
+            q_r = q
+            k_c = _gather_paged(k, block_tables).astype(q.dtype)
+        outs = [
+            reference_attention(
+                q_r[:, :, i : i + 1], k_c, v_c, causal=False, scale=scale,
+                kv_mask=band[:, i],
+            )
+            for i in range(q_len)
+        ]
+        return jnp.concatenate(outs, axis=2) if q_len > 1 else outs[0]
+    from repro.kernels import ops  # deferred: kernels are optional at import
+
+    return ops.paged_decode_attention(
+        q, k, v, block_tables=block_tables, lengths=lengths,
+        k_fused_pool=k_fused, perm=perm, group_size=group_size, scale=scale,
         interpret=cfg.interpret,
     )

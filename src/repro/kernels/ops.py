@@ -28,6 +28,7 @@ from repro.core import grouping, lsh
 from repro.core.distr_attention import DistrConfig, compute_block_permutations
 from repro.kernels import backward as bwd
 from repro.kernels import decode as decode_kernels
+from repro.kernels import paged_decode as paged_decode_kernels
 from repro.kernels.distr_attention import distr_attention_kernel_call
 from repro.kernels.flash_attention import flash_attention_kernel_call
 from repro.kernels.ssd import ssd_kernel_call
@@ -618,6 +619,116 @@ def decode_attention(
     lengths = _decode_lengths(lengths, q.shape[0], k.shape[2])
     return _decode_attention_jit(
         q, k, v, lengths, scale, block_k, q_len, interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) flash-decoding — the paged serve-path hot op
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_impl(q_packed, k_pool, v_pool, block_tables, lengths, *,
+                       hq, rows_live, scale, q_len, interpret):
+    o, m, l = paged_decode_kernels.paged_decode_kernel_call(
+        q_packed, k_pool, v_pool, block_tables, lengths,
+        scale=scale, q_len=q_len, interpret=interpret,
+    )
+    return _unpack_gqa_rows(
+        decode_kernels.merge_splits(o, m, l), rows_live, hq
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "q_len", "interpret")
+)
+def _paged_decode_attention_jit(q, k_pool, v_pool, block_tables, lengths,
+                                scale, q_len, interpret):
+    hq, hkv = q.shape[1], k_pool.shape[1]
+    q_packed, rows_live = _pack_gqa_rows(q, hkv)
+    out = _paged_decode_impl(
+        q_packed, k_pool, v_pool, block_tables, lengths, hq=hq,
+        rows_live=rows_live, scale=scale, q_len=q_len, interpret=interpret,
+    )
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group_size", "scale", "q_len", "interpret")
+)
+def _paged_decode_attention_fused_jit(q, k_fused_pool, v_pool, perm,
+                                      block_tables, lengths, group_size,
+                                      scale, q_len, interpret):
+    hq, hkv = q.shape[1], k_fused_pool.shape[1]
+    # Static per-KV-head permutation, same as the contiguous fused decode —
+    # paged decode has no per-Q-block LSH stage (serve.kv_cache.static_perms).
+    q_s = grouping.sample_q_heads(q, perm, group_size)
+    q_packed, rows_live = _pack_gqa_rows(q_s, hkv)
+    out = _paged_decode_impl(
+        q_packed, k_fused_pool, v_pool, block_tables, lengths, hq=hq,
+        rows_live=rows_live, scale=scale, q_len=q_len, interpret=interpret,
+    )
+    return out.astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray | None,
+    v_pool: jnp.ndarray,
+    *,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    k_fused_pool: jnp.ndarray | None = None,
+    perm: jnp.ndarray | None = None,
+    group_size: int = 1,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Block-table split-K flash-decoding over a paged KV pool
+    (kernels/paged_decode.py).
+
+    q: (B, Hq, q_len, d) with q_len small (1, or a chunked-prefill window);
+    k_pool, v_pool: (P, Hkv, block_size, d) shared block pools;
+    ``block_tables``: (B, max_blocks) int32 physical block ids (logical
+    block j of request b lives at ``block_tables[b, j]``); ``lengths``:
+    (B,) live token counts — the kernel streams ``ceil(length/block_size)``
+    pool blocks per request through scalar-prefetched, clamped index maps.
+
+    Distr fused-K̂ variant: pass ``k_fused_pool`` (P, Hkv, block_size,
+    d/G*), the layer's static ``perm`` (Hkv, d) and ``group_size`` — the
+    score stage streams the narrow fused pool (column-sampled Q), the value
+    stage full V; ``k_pool`` may be None (raw K stays cold on the paged
+    serve path).  ``scale`` always refers to the full head dim (default
+    1/√d).  ``interpret=None`` auto-detects the backend.
+    """
+    d = v_pool.shape[-1]
+    q_len = q.shape[2]
+    scale = float(scale) if scale is not None else 1.0 / (d ** 0.5)
+    if interpret is None:
+        interpret = default_interpret()
+    block_size = v_pool.shape[2]
+    capacity = block_tables.shape[1] * block_size
+    if lengths is None:
+        # None ⇒ every table position live (contiguous-op convention).
+        lengths = jnp.full((q.shape[0],), capacity, jnp.int32)
+    else:
+        # Deliberately NOT clamped to capacity: a padded chunked-prefill
+        # window may overhang it (lengths = pos + w with the last rows
+        # dead), and clamping would shift the LIVE rows' causal band
+        # ``col < length − (q_len−1−i)`` downward — silently dropping
+        # their most recent context.  The kernel is safe unclamped: the
+        # index map's split id never exceeds the table width (jj ≤ j),
+        # and live rows' bands always land within capacity.
+        lengths = jnp.asarray(lengths, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    if k_fused_pool is not None:
+        if perm is None or group_size <= 1:
+            raise ValueError("k_fused_pool needs perm and group_size > 1")
+        return _paged_decode_attention_fused_jit(
+            q, k_fused_pool, v_pool, perm, block_tables, lengths, group_size,
+            scale, q_len, interpret,
+        )
+    return _paged_decode_attention_jit(
+        q, k_pool, v_pool, block_tables, lengths, scale, q_len, interpret
     )
 
 

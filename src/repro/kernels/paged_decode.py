@@ -1,0 +1,183 @@
+"""Block-table (paged) split-K flash-decoding Pallas kernel.
+
+The contiguous decode kernel (kernels/decode.py) assumes each slot owns a
+``(Hkv, max_len, d)`` slab — the allocation model the paged serving
+subsystem replaces.  Here KV lives in a shared *block pool*
+``(P, Hkv, block_size, d)`` and each request describes its sequence as a
+**block table**: logical block ``j`` of request ``b`` holds tokens
+``[j·bs, (j+1)·bs)`` and lives in physical pool block ``bt[b, j]``
+(serve/paged.py owns allocation; DESIGN.md §Paged serving).
+
+The split-K structure carries over unchanged — one grid step per logical
+block, unnormalised partials, the same cross-split LSE merge
+(``kernels.decode.merge_splits``) — only the *addressing* differs:
+
+* **Scalar-prefetched block table.**  ``PrefetchScalarGridSpec`` makes the
+  per-request live lengths *and* the block table available to the K/V
+  BlockSpec index maps, so grid step ``(b, h, j)`` DMAs physical block
+  ``bt[b, j]`` straight out of the pool — no gather materialises a
+  contiguous copy of the request's KV.
+
+* **Clamped index maps.**  Dead logical blocks (``j·bs ≥ length``) clamp to
+  the request's last live table entry: the pipeline sees a repeated block
+  index and skips the DMA, so dead pool blocks are never streamed and
+  per-token KV traffic tracks ``ceil(length/bs)`` blocks — the paged analog
+  of the ring cache's length-aware grid.
+
+* **One kernel, two cache widths.**  Exactly like the contiguous kernel,
+  the score width is whatever ``q``/``k_pool`` carry: the flash variant
+  streams the raw K pool (width ``d``), the fused-K̂ distr variant streams
+  the ``d/G*``-wide fused pool with column-sampled queries (static per-layer
+  permutation, applied by the ops wrapper).  V is always full width.
+
+* **GQA head-packing + small-q_len banding** are shared verbatim with
+  kernels/decode.py: rows pack ``q_per_kv × q_len`` queries per KV head,
+  and packed row ``r`` (query token ``i = r mod q_len``) attends to cache
+  positions ``< length − (q_len − 1 − i)`` — which is also what makes
+  *chunked prefill* ride this kernel (a width-``c`` chunk is a ``q_len=c``
+  banded decode).
+
+Validated against gathered-contiguous oracles in tests/test_paged.py
+(interpret mode on CPU; compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import NEG_INF
+from repro.kernels.tpu_compat import CompilerParams
+
+GARBAGE_BLOCK = 0  # pool block 0 is never allocated: dead-lane writes land here
+
+
+def _paged_decode_kernel(
+    lens_ref,  # scalar prefetch: (B,) int32 live lengths
+    bt_ref,  # scalar prefetch: (B, max_blocks) int32 block table
+    q_ref,  # (1, 1, rows, d_score)
+    k_ref,  # (1, 1, block_size, d_score)   physical block via index map
+    v_ref,  # (1, 1, block_size, d)
+    o_ref,  # (1, 1, 1, rows, d)      unnormalised partial
+    m_ref,  # (1, 1, 1, rows)         per-split row max
+    l_ref,  # (1, 1, 1, rows)         per-split row sum
+    *,
+    scale: float,
+    block_size: int,
+    q_len: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = lens_ref[b]
+
+    # Dead logical block: this request's live KV ends before block j.  The
+    # index map already re-pointed the DMA at the last live physical block;
+    # skip the math and emit identity stats for the merge.
+    live = j * block_size < length
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (rows, d_score)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_size, d_score)
+        v = v_ref[0, 0].astype(jnp.float32)  # (block_size, d)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (rows, block_size)
+
+        col = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # Packed row r is query token i = r % q_len; it sees the cache up to
+        # length − (q_len − 1 − i) tokens (q_len = 1 ⇒ plain `col < length`).
+        row_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % q_len
+        row_len = length - (q_len - 1 - row_tok)
+        mask = col < row_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m = s.max(axis=1)  # (rows,)
+        p = jnp.where(mask, jnp.exp(s - m[:, None]), 0.0)
+        o_ref[0, 0, 0] = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[0, 0, 0] = m
+        l_ref[0, 0, 0] = p.sum(axis=1)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        o_ref[0, 0, 0] = jnp.zeros_like(o_ref[0, 0, 0])
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG_INF)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+
+
+def paged_decode_kernel_call(
+    q: jnp.ndarray,  # (B, Hkv, rows, d_score) — GQA-packed (+ padded) queries
+    k_pool: jnp.ndarray,  # (P, Hkv, block_size, d_score) — raw K or fused K̂ pool
+    v_pool: jnp.ndarray,  # (P, Hkv, block_size, d)
+    block_tables: jnp.ndarray,  # (B, max_blocks) int32 physical block ids
+    lengths: jnp.ndarray,  # (B,) int32 live token counts
+    *,
+    scale: float,
+    q_len: int,
+    interpret: bool = True,
+):
+    """Raw pallas_call → unnormalised split partials ``(o, m, l)``.
+
+    o: (B, Hkv, max_blocks, rows, d) f32; m, l: (B, Hkv, max_blocks, rows).
+    One split per *logical* block-table entry; the caller performs the
+    cross-split LSE merge (``kernels.decode.merge_splits`` — identical
+    algebra, the splits just came from non-contiguous physical blocks).
+    """
+    b, hkv, rows, d_score = q.shape
+    block_size, d = k_pool.shape[2], v_pool.shape[3]
+    max_blocks = block_tables.shape[1]
+
+    def q_index(bi, h, j, lens, bt):
+        return (bi, h, 0, 0)
+
+    def kv_index(bi, h, j, lens, bt):
+        # Clamp dead logical blocks to the request's last live table entry:
+        # the pipeline sees a repeated physical index and skips the DMA —
+        # dead pool blocks are never streamed, so per-token traffic tracks
+        # ceil(length / block_size), not the table width.
+        last_live = jnp.maximum(pl.cdiv(lens[bi], block_size) - 1, 0)
+        return (bt[bi, jnp.minimum(j, last_live)], h, 0, 0)
+
+    def out_index(bi, h, j, lens, bt):
+        return (bi, h, j, 0, 0)
+
+    def stat_index(bi, h, j, lens, bt):
+        return (bi, h, j, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d_score), q_index),
+            pl.BlockSpec((1, 1, block_size, d_score), kv_index),
+            pl.BlockSpec((1, 1, block_size, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, rows, d), out_index),
+            pl.BlockSpec((1, 1, 1, rows), stat_index),
+            pl.BlockSpec((1, 1, 1, rows), stat_index),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, block_size=block_size, q_len=q_len
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, max_blocks, rows, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, max_blocks, rows), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, max_blocks, rows), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="paged_decode_splitk",
+    )(lengths, block_tables, q, k_pool, v_pool)

@@ -236,6 +236,114 @@ def attention_decode_apply(
     return out, (cache_k, cache_v)
 
 
+def paged_insert(
+    pool: jnp.ndarray,
+    new: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    pos: jnp.ndarray,
+    count: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Insert a token window into a paged KV pool through the block table.
+
+    pool: (P, Hkv, bs, d); new: (B, Hkv, w, d); block_tables: (B,
+    max_blocks) physical ids; pos: (B,) absolute start positions.  Token
+    ``t`` of request ``b`` lands at block ``bt[b, (pos+t)//bs]`` offset
+    ``(pos+t) mod bs``.  ``count`` (B,) gates writes: rows ``t ≥ count[b]``
+    (padding in a chunked prefill, idle decode lanes) are redirected to the
+    reserved garbage block so they can never corrupt live KV.
+    """
+    from repro.kernels.paged_decode import GARBAGE_BLOCK
+
+    bs = pool.shape[2]
+    b, hkv, w, d = new.shape
+    max_blocks = block_tables.shape[1]
+    # One vectorised scatter over all B·w writes (a loop of per-token
+    # dynamic_update_slice would copy the whole pool per write on
+    # non-donating backends).  Distinct live (block, offset) pairs never
+    # collide — distinct requests own distinct blocks — and any number of
+    # masked writes may collide on the garbage block, whose content is
+    # never read.
+    p = pos[:, None] + jnp.arange(w)[None, :]  # (B, w) absolute positions
+    blk_idx = jnp.minimum(p // bs, max_blocks - 1)
+    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)  # (B, w)
+    live = jnp.arange(w)[None, :] < (
+        count[:, None] if count is not None else w
+    )
+    # Positions past the table's capacity also divert to garbage — a
+    # clamped blk_idx would silently overwrite the LAST live block.
+    live = live & (p < max_blocks * bs)
+    blk = jnp.where(live, blk, GARBAGE_BLOCK)
+    vals = new.astype(pool.dtype).transpose(0, 2, 1, 3).reshape(
+        b * w, hkv, d
+    )
+    return pool.at[blk.reshape(-1), :, (p % bs).reshape(-1), :].set(vals)
+
+
+def attention_decode_paged(
+    params,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    pool_k: jnp.ndarray | None,
+    pool_v: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    cache_index: jnp.ndarray,
+    count: jnp.ndarray | None = None,
+    pool_k_fused: jnp.ndarray | None = None,
+    perm: jnp.ndarray | None = None,
+):
+    """Windowed decode against the paged block pool (w = 1 for token
+    decode, w = chunk width for chunked prefill).
+
+    x: (B, w, d_model); ``cache_index``: (B,) absolute start positions;
+    ``count``: (B,) live tokens in this window (padding rows write to the
+    garbage block and their outputs are ignored by the caller).  The
+    attention window is banded — token ``t`` sees positions ``≤ pos + t``
+    — so a width-``c`` chunk reproduces causal prefill exactly
+    (kernels/paged_decode.py).  Fused-K̂ variant: pass ``pool_k_fused`` +
+    the layer's static ``perm``; the raw K pool may be None (it is never
+    read or written on the fused paged path).
+    """
+    from repro.serve import kv_cache as kvc
+
+    b, w, _ = x.shape
+    pos = _as_pos_vector(cache_index, b)
+    positions = pos[:, None] + jnp.arange(w)[None, :]
+    q = _split_heads(layers.linear_apply(params["wq"], x), cfg.n_heads)
+    k = _split_heads(layers.linear_apply(params["wk"], x), cfg.n_kv_heads)
+    v = _split_heads(layers.linear_apply(params["wv"], x), cfg.n_kv_heads)
+    if cfg.pos == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    pool_v = paged_insert(pool_v, v, block_tables, pos, count)
+    scale = 1.0 / (cfg.head_dim_**0.5)
+    # Kernel lengths include the whole window (pos + w): live row t's band
+    # col < pos + t + 1 then lands exactly on its own position; padded rows
+    # only ever widen *their own* (discarded) reads.
+    lengths = pos + w
+    if pool_k_fused is not None:
+        g = cfg.attention.distr.group_size
+        k_f_new = kvc.fuse_new_k(k, perm, g)
+        pool_k_fused = paged_insert(pool_k_fused, k_f_new, block_tables, pos,
+                                    count)
+        o = attend_decode(
+            q, None, pool_v, cfg.attention, lengths=lengths,
+            k_fused=pool_k_fused, perm=perm, group_size=g, scale=scale,
+            block_tables=block_tables,
+        )
+        new_pools = (None, pool_v, pool_k_fused)
+    else:
+        pool_k = paged_insert(pool_k, k, block_tables, pos, count)
+        o = attend_decode(
+            q, pool_k, pool_v, cfg.attention, lengths=lengths, scale=scale,
+            block_tables=block_tables,
+        )
+        new_pools = (pool_k, pool_v, None)
+    out = layers.linear_apply(params["wo"], _merge_heads(o.astype(x.dtype)))
+    return out, new_pools
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2): low-rank Q, compressed KV cache, decoupled RoPE.
 # ---------------------------------------------------------------------------

@@ -200,6 +200,39 @@ def block_decode_apply(
     return x + y, new_cache
 
 
+def block_paged_decode_apply(
+    params,
+    x: jnp.ndarray,
+    cfg,
+    layer_type: str,
+    *,
+    pool_k,
+    pool_v,
+    block_tables,
+    pos,
+    count=None,
+    pool_k_fused=None,
+    perm=None,
+):
+    """Windowed decode of one transformer block against the paged KV pool
+    (serve.paged): w = 1 is token decode, w = chunk width is chunked
+    prefill.  GQA dense/moe only — the paged layout replaces the ring slab
+    cache, the other families keep the slot engine."""
+    h = norm_apply(params["norm1"], x, cfg)
+    o, (pk, pv, pkf) = attn_mod.attention_decode_paged(
+        params["attn"], h, cfg,
+        pool_k=pool_k, pool_v=pool_v, block_tables=block_tables,
+        cache_index=pos, count=count, pool_k_fused=pool_k_fused, perm=perm,
+    )
+    x = x + o
+    h2 = norm_apply(params["norm2"], x, cfg)
+    if layer_type == "moe":
+        y, _ = moe.moe_apply(params["ffn"], h2, cfg, decode=True)
+    else:
+        y = layers.mlp_apply(params["ffn"], h2, act=cfg.act)
+    return x + y, (pk, pv, pkf)
+
+
 # ---------------------------------------------------------------------------
 # Hybrid (zamba2) shared attention block: fuse(concat(x, x0)) → dense block
 # ---------------------------------------------------------------------------

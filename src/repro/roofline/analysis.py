@@ -440,6 +440,65 @@ def decode_attention_cost(
     }
 
 
+def paged_decode_attention_cost(
+    b: int,
+    hq: int,
+    hkv: int,
+    length: int,
+    max_blocks: int,
+    block_size: int,
+    d: int,
+    *,
+    group_size: int = 1,
+    q_len: int = 1,
+) -> dict:
+    """FLOPs / bytes model of one block-table split-K decode step (per
+    layer; kernels/paged_decode.py).
+
+    The clamped index maps stream ``ceil(length/block_size)`` pool blocks
+    per request — same live-length scaling as the contiguous decode kernel
+    — plus the block table itself (scalar prefetch: 4 bytes per table
+    entry).  ``slab_kv_bytes`` reports what the *slot engine* commits for
+    the same request: a full ``max_blocks·block_size`` contiguous slab —
+    the allocation the pool shares across requests; the difference (times
+    the request count) is the HBM the paged engine turns into extra batch
+    lanes at equal budget (benchmarks/serving.py).  The fused-K̂ variant
+    (``group_size > 1``) streams the ``d/G*``-wide fused pool in the score
+    stage, full V in the value stage.  Split partials (o, m, l, f32) span
+    all ``max_blocks`` table entries — jit shapes are static, dead splits
+    still zero-write — so the merge term scales with the table width.
+    """
+    capacity = max_blocks * block_size
+    live = min(max(length, 1), capacity)
+    live_blocks = -(-live // block_size)
+    nk_live = live_blocks * block_size
+    d_score = d // group_size
+    w = 2  # bf16 pools / activations
+    rows = b * hq * q_len
+
+    kv_bytes = w * b * hkv * nk_live * (d_score + d)  # K̂/K + V block streams
+    slab_kv_bytes = w * b * hkv * capacity * (d_score + d)
+    table_bytes = 4 * b * max_blocks
+    q_bytes = w * rows * d_score
+    o_bytes = w * rows * d
+    partial_bytes = 2 * 4 * b * hq * q_len * max_blocks * (d + 2)
+
+    qk_flops = 2 * rows * nk_live * d_score
+    pv_flops = 2 * rows * nk_live * d
+    softmax_flops = 4 * rows * nk_live
+    merge_flops = 4 * rows * max_blocks * (d + 2)
+
+    return {
+        "kv_bytes": kv_bytes,
+        "slab_kv_bytes": slab_kv_bytes,
+        "table_bytes": table_bytes,
+        "hbm_bytes": kv_bytes + table_bytes + q_bytes + o_bytes + partial_bytes,
+        "mxu_flops": qk_flops + pv_flops,
+        "total_flops": qk_flops + pv_flops + softmax_flops + merge_flops,
+        "blocks_live": live_blocks,
+    }
+
+
 # ---------------------------------------------------------------------------
 # MODEL_FLOPS (6·N·D convention)
 # ---------------------------------------------------------------------------

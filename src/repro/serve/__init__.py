@@ -1,4 +1,5 @@
-"""Serving substrate: KV caches, prefill/decode steps, sampler, engine."""
-from repro.serve import engine, kv_cache, sampler, serve_step
+"""Serving substrate: KV caches (contiguous ring + paged block pool),
+prefill/decode steps, sampler, engines, continuous-batching scheduler."""
+from repro.serve import engine, kv_cache, paged, sampler, scheduler, serve_step
 
-__all__ = ["engine", "kv_cache", "sampler", "serve_step"]
+__all__ = ["engine", "kv_cache", "paged", "sampler", "scheduler", "serve_step"]

@@ -1,6 +1,15 @@
-"""Continuous-batching serving engine.
+"""Serving engines: the slot engine (contiguous ring caches) and the paged
+engine (block-pool KV + continuous-batching scheduler).
 
-Slot-based: the decode cache holds ``max_slots`` sequences; requests are
+``ServeEngine`` is slot-based: the decode cache holds ``max_slots``
+sequences with a contiguous ``max_len`` slab each — admission is
+slot-bound.  ``PagedServeEngine`` replaces the slabs with a shared block
+pool and delegates every step to ``serve.scheduler`` (token-budget
+admission, chunked prefill, preempt-to-host) — admission is memory-bound,
+so mixed-length workloads pack more concurrent decode lanes into the same
+HBM (DESIGN.md §Paged serving, benchmarks/serving.py).
+
+Slot engine: requests are
 prefilled one at a time (bucketed prompt padding bounds recompiles) and their
 caches inserted into free slots; every ``step()`` advances *all* active slots
 by one token in a single jitted decode.  Finished sequences free their slot
@@ -20,6 +29,7 @@ timing sweeps run once here, never inside a serving step.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -31,6 +41,20 @@ from repro.serve.sampler import sample
 from repro.serve.serve_step import make_decode_step, make_prefill
 from repro.tune.autotune import warm_engine
 from repro.utils.jax_compat import maybe_set_mesh
+
+
+def _validate_prompt(prompt, limit: int, what: str = "max_len") -> None:
+    """Shared submission-time prompt validation for both engines: a prompt
+    longer than the cache would otherwise shape-error (or silently corrupt
+    KV) deep inside admission."""
+    if len(prompt) > limit:
+        raise ValueError(
+            f"prompt length {len(prompt)} exceeds the engine's "
+            f"{what}={limit}; truncate the prompt or build the engine "
+            "with a larger cache"
+        )
+    if not prompt:
+        raise ValueError("prompt must hold at least one token")
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -52,7 +76,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, *, max_slots: int = 8, max_len: int = 512,
-                 temperature: float = 0.0, seed: int = 0, mesh=None):
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
+                 seed: int = 0, mesh=None):
         """``mesh``: optional device mesh.  When it carries the axis named
         by ``cfg.attention.context_axis``, long-prompt prefill (sequence ≥
         ring size × 128) runs ring sequence-parallel attention
@@ -69,6 +94,8 @@ class ServeEngine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
         self.mesh = mesh
         self._uid = itertools.count()
         self._rng = jax.random.PRNGKey(seed)
@@ -89,12 +116,25 @@ class ServeEngine:
 
         self._decode = jax.jit(make_decode_step(cfg))
         self._prefills: dict[int, object] = {}
+        # Wall-clock per request (submit / first token) so the serving
+        # benchmark compares TTFT against the paged engine's scheduler-
+        # tracked metrics on equal terms.  In-flight timings are folded
+        # into _metric_records (and dropped from these dicts) when a
+        # request finishes, so they track active requests, not history.
+        self._t_submit: dict[int, float] = {}
+        self._t_first: dict[int, float] = {}
+        self._metric_records: dict[int, dict] = {}
 
     # ------------------------------------------------------------------
     def add_request(self, prompt: list[int], *, max_new_tokens: int = 32,
                     eos_id: int | None = None) -> int:
+        # Regression guard: a prompt longer than the cache used to
+        # shape-error inside _admit (`toks[0, :n] = prompt` against the
+        # clamped max_len bucket); fail cleanly at submission instead.
+        _validate_prompt(prompt, self.max_len)
         req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
         self.pending.append(req)
+        self._t_submit[req.uid] = time.perf_counter()
         return req.uid
 
     def _free_slots(self) -> list[int]:
@@ -179,12 +219,16 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, self.tokens, self.cache, step_pos
         )
-        next_tokens = sample(logits, rng=sub, temperature=self.temperature)
+        next_tokens = sample(
+            logits, rng=sub, temperature=self.temperature,
+            top_k=self.top_k, top_p=self.top_p,
+        )
         self.pos = step_pos
         self.tokens = next_tokens[:, None]
 
         done_now = []
         toks = np.asarray(next_tokens)
+        now = time.perf_counter()
         # Ring caches (GQA, length-tracked) slide past max_len: the ring
         # write evicts the oldest token and the kernels see the live window
         # min(length, max_len).  Other cache layouts (MLA/SSM/hybrid/encdec)
@@ -193,11 +237,14 @@ class ServeEngine:
         for slot, req in list(self.active.items()):
             t = int(toks[slot])
             req.generated.append(t)
+            if len(req.generated) == 1:
+                self._t_first[req.uid] = now
             limit = len(req.generated) >= req.max_new_tokens
             hit_eos = req.eos_id is not None and t == req.eos_id
             full = (not sliding) and int(self.pos[slot]) >= self.max_len - 2
             if limit or hit_eos or full:
                 req.done = True
+                self._finish_metrics(req, now)
                 done_now.append(req)
                 self.finished.append(req)
                 del self.active[slot]
@@ -214,3 +261,248 @@ class ServeEngine:
             if not self.active and not self.pending:
                 break
         return self.finished
+
+    def _finish_metrics(self, req: Request, now: float) -> None:
+        t0 = self._t_submit.pop(req.uid, None)
+        t1 = self._t_first.pop(req.uid, None)
+        n = len(req.generated)
+        self._metric_records[req.uid] = {
+            "uid": req.uid,
+            "ttft_s": None if t0 is None or t1 is None else t1 - t0,
+            "tpot_s": None if t1 is None else (now - t1) / max(n - 1, 1),
+            "n_generated": n,
+            "n_preemptions": 0,
+        }
+
+    def metrics(self) -> list[dict]:
+        """Per-request TTFT / TPOT (same shape as PagedServeEngine.metrics,
+        so benchmarks/serving.py compares the engines on equal terms).
+        Records live exactly as long as ``finished`` does."""
+        return [
+            self._metric_records[req.uid]
+            for req in self.finished
+            if req.uid in self._metric_records
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Paged engine: block-pool KV + continuous-batching scheduler
+# ---------------------------------------------------------------------------
+
+
+class PagedServeEngine:
+    """Serving engine over the paged KV subsystem (serve.paged +
+    serve.scheduler + kernels/paged_decode.py).
+
+    Replaces the per-slot contiguous ``max_len`` slab with a shared block
+    pool: HBM is committed per *live token* (rounded to ``block_size``),
+    not per worst-case sequence, so at equal memory budget a mixed-length
+    workload runs far more concurrent decode lanes.  Every ``step()``
+    delegates to the continuous-batching :class:`~repro.serve.scheduler.
+    Scheduler`: token-budget admission each tick, chunked prefill riding
+    the paged decode kernel (banded multi-token windows — exact attention,
+    unlike the slot engine's approximate distr prefill when
+    ``impl='distr'``), FCFS with whole-request preemption to host when the
+    pool runs dry.
+
+    Scope: GQA dense/moe families (the pools mirror the ring k/v cache
+    layout; fused-K̂ pools under ``attention.distr_decode``).  A request's
+    total length is bounded by ``max_len`` (the block-table width) — the
+    sliding-window ring trick is a contiguous-cache feature.
+
+    Construction resolves the pool block size through the autotuner
+    (``repro.tune`` kernel key ``paged_decode``) — under
+    ``REPRO_TUNE=measure`` the sweep runs once here, never in a tick.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int = 8, max_len: int = 512,
+                 block_size: int | None = None, num_blocks: int | None = None,
+                 prefill_chunk: int = 32, token_budget: int = 0,
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
+                 seed: int = 0, cache_dtype=jnp.bfloat16, clock=None):
+        from repro.serve import paged
+        from repro.serve.scheduler import Scheduler, SchedulerConfig
+        from repro.serve.serve_step import make_paged_step
+        from repro.tune.autotune import warm_paged_engine
+
+        if cfg.family not in ("dense", "moe") or cfg.use_mla:
+            raise NotImplementedError(
+                "paged serving covers GQA dense/moe; use ServeEngine for "
+                f"family={cfg.family!r} use_mla={cfg.use_mla}"
+            )
+        if getattr(cfg, "frontend", None):
+            raise NotImplementedError(
+                "chunked prefill drives token prompts; patch/frame "
+                "frontends keep the slot engine"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
+        self._uid = itertools.count()
+        self._rng = jax.random.PRNGKey(seed)
+
+        # Pool block size doubles as allocator granularity: resolve it
+        # (tuned under REPRO_TUNE) before the pools are shaped by it.  An
+        # explicit block_size skips the warm-up — a measure-mode sweep
+        # whose result would be discarded is pure construction-time waste.
+        if block_size is None:
+            self.tuned_blocks = warm_paged_engine(cfg, max_len)
+            block_size = self.tuned_blocks.get("paged_decode", 128)
+        else:
+            self.tuned_blocks = {}
+        self.block_size = min(block_size, max_len)
+        self.max_blocks = -(-max_len // self.block_size)
+        self.capacity_tokens = self.max_blocks * self.block_size
+        if num_blocks is None:
+            # Memory-pressure-free default: every lane can hold max_len.
+            num_blocks = 1 + max_batch * self.max_blocks
+        if num_blocks - 1 < self.max_blocks:
+            raise ValueError(
+                f"pool of {num_blocks} blocks (1 reserved) cannot hold one "
+                f"full request ({self.max_blocks} blocks of "
+                f"{self.block_size}); preemption could not guarantee "
+                "progress"
+            )
+        self.cache = paged.PagedKVCache(
+            cfg, num_blocks, self.block_size, dtype=cache_dtype
+        )
+        self.prefill_chunk = min(prefill_chunk, max_len)
+        self.scheduler = Scheduler(
+            SchedulerConfig(
+                max_batch=max_batch, prefill_chunk=self.prefill_chunk,
+                token_budget=token_budget,
+            ),
+            **({"clock": clock} if clock is not None else {}),
+        )
+        self._decode = jax.jit(make_paged_step(cfg, 1))
+        self._chunk = jax.jit(make_paged_step(cfg, self.prefill_chunk))
+        self.finished: list[Request] = []
+
+    # -- public API (mirrors ServeEngine) --------------------------------
+
+    def add_request(self, prompt: list[int], *, max_new_tokens: int = 32,
+                    eos_id: int | None = None) -> int:
+        # The first decode token writes at position len(prompt): a request
+        # must leave at least one block-table slot for it (a clamped write
+        # at capacity would land inside the LAST live block).
+        _validate_prompt(
+            prompt, min(self.max_len, self.capacity_tokens - 1),
+            what="max_len (capacity − 1)",
+        )
+        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
+        self.scheduler.submit(req)
+        return req.uid
+
+    def step(self) -> list[Request]:
+        """One scheduler tick: admission + chunked prefill + batched decode
+        (serve.scheduler.Scheduler.tick)."""
+        done = self.scheduler.tick(self)
+        self.finished.extend(done)
+        return done
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.scheduler.has_work():
+                break
+        return self.finished
+
+    def metrics(self) -> list[dict]:
+        """Per-request TTFT / TPOT / preemption counts (scheduler-tracked)."""
+        return self.scheduler.metrics()
+
+    # -- scheduler primitives --------------------------------------------
+
+    def free_lane(self) -> int:
+        for lane in range(self.max_batch):
+            if lane not in self.scheduler.running:
+                return lane
+        raise RuntimeError("no free lane (scheduler admitted past max_batch)")
+
+    def alloc(self, entry, n_tokens: int) -> bool:
+        from repro.serve.paged import PoolExhausted
+
+        try:
+            self.cache.allocate_to(entry.uid, min(n_tokens, self.capacity_tokens))
+            return True
+        except PoolExhausted:
+            return False
+
+    def can_admit(self, entry) -> bool:
+        """Admission watermark: the whole prompt plus one decode-growth
+        block must fit in free blocks before the first chunk runs."""
+        need = self.cache.blocks_for(
+            min(len(entry.req.prompt) + 1, self.capacity_tokens)
+        )
+        return self.cache.pool.num_free >= need
+
+    def evict(self, entry) -> None:
+        self.cache.evict_to_host(entry.uid, entry.length,
+                                 pad_to=self.max_blocks)
+
+    def restore(self, entry) -> bool:
+        from repro.serve.paged import PoolExhausted
+
+        try:
+            self.cache.restore(entry.uid)
+            return True
+        except PoolExhausted:
+            return False
+
+    def release(self, entry) -> None:
+        self.cache.free(entry.uid)
+
+    def holds_blocks(self, entry) -> bool:
+        return bool(self.cache.tables.get(entry.uid))
+
+    def sample_one(self, logits_row: jnp.ndarray) -> int:
+        self._rng, sub = jax.random.split(self._rng)
+        tok = sample(
+            logits_row[None], rng=sub, temperature=self.temperature,
+            top_k=self.top_k, top_p=self.top_p,
+        )
+        return int(tok[0])
+
+    def prefill_chunk_run(self, entry, chunk: int) -> jnp.ndarray:
+        """One chunked-prefill window for ``entry`` (B = 1 jit bucket);
+        returns the last *live* row's logits (exact last-position
+        distribution once the prompt completes)."""
+        start = entry.prompt_done
+        toks = np.zeros((1, self.prefill_chunk), np.int32)
+        toks[0, :chunk] = entry.req.prompt[start : start + chunk]
+        bt = self.cache.table_array([entry.uid], self.max_blocks)
+        logits, self.cache.pools = self._chunk(
+            self.params, jnp.asarray(toks), self.cache.pools, bt,
+            jnp.asarray([start], jnp.int32), jnp.asarray([chunk], jnp.int32),
+        )
+        return logits[0, chunk - 1]
+
+    def decode_tick(self, running: dict) -> np.ndarray:
+        """One batched decode over all running lanes; returns (max_batch,)
+        sampled tokens (garbage on idle lanes — the scheduler only reads
+        occupied ones)."""
+        occupied = np.zeros((self.max_batch,), bool)
+        pos = np.zeros((self.max_batch,), np.int32)
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        uids = [-1] * self.max_batch
+        for lane, e in running.items():
+            occupied[lane] = True
+            pos[lane] = e.length
+            toks[lane, 0] = e.next_token
+            uids[lane] = e.uid
+        bt = self.cache.table_array(uids, self.max_blocks)
+        count = jnp.asarray(occupied.astype(np.int32))
+        logits, self.cache.pools = self._decode(
+            self.params, jnp.asarray(toks), self.cache.pools, bt,
+            jnp.asarray(pos), count,
+        )
+        self._rng, sub = jax.random.split(self._rng)
+        next_tokens = sample(
+            logits[:, -1], rng=sub, temperature=self.temperature,
+            top_k=self.top_k, top_p=self.top_p,
+        )
+        return np.asarray(next_tokens)

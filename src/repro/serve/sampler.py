@@ -1,8 +1,17 @@
-"""Token sampling: greedy / temperature / top-k, pure-functional."""
+"""Token sampling: greedy / temperature / top-k / top-p, pure-functional.
+
+``temperature <= 0`` is exact greedy regardless of the truncation knobs —
+the engines' greedy-parity tests rely on that (a top-k/top-p setting must
+never change deterministic decoding).  top-k and top-p compose: logits are
+truncated to the top-k set first, then to the smallest nucleus whose
+probability mass reaches ``top_p``.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+_MASKED = -1e30
 
 
 def sample(
@@ -11,8 +20,14 @@ def sample(
     rng: jax.Array | None = None,
     temperature: float = 0.0,
     top_k: int = 0,
+    top_p: float = 0.0,
 ) -> jnp.ndarray:
-    """→ (B,) int32 next tokens.  temperature 0 = greedy."""
+    """→ (B,) int32 next tokens.  temperature 0 = greedy (knobs ignored);
+    ``top_k > 0`` keeps the k highest logits; ``0 < top_p < 1`` keeps the
+    smallest set of tokens whose softmax mass ≥ top_p (nucleus sampling,
+    applied after the top-k cut).  The highest-probability token always
+    survives both cuts, so sampling can never mask everything.
+    """
     if logits.ndim == 3:
         logits = logits[:, -1, :]
     logits = logits.astype(jnp.float32)
@@ -21,6 +36,19 @@ def sample(
     logits = logits / temperature
     if top_k > 0:
         kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        logits = jnp.where(logits < kth, _MASKED, logits)
+    if 0.0 < top_p < 1.0:
+        # Nucleus: sort descending, keep the prefix whose cumulative
+        # probability (inclusive) first reaches top_p — the top token's
+        # cumulative is its own mass, so it is always kept.
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = cum - probs < top_p  # exclusive mass before this token
+        # Threshold = smallest kept logit per row.
+        thresh = jnp.min(
+            jnp.where(keep, sorted_logits, jnp.inf), axis=-1, keepdims=True
+        )
+        logits = jnp.where(logits < thresh, _MASKED, logits)
     assert rng is not None, "temperature sampling needs an rng"
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

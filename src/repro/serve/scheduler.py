@@ -1,0 +1,308 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+The slot engine admits a request only when a whole slot (a ``max_len`` KV
+slab) frees up — admission is *slot*-bound.  This scheduler makes admission
+*memory*-bound and *budget*-bound instead, deciding every tick:
+
+  * **Token-budget admission.**  Each tick spends at most
+    ``token_budget`` tokens of model work: one token per running decode
+    lane plus chunked-prefill tokens for the head of the queue.  New work
+    is admitted every step, not only when a sequence finishes.
+
+  * **Chunked prefill interleaved with decode.**  Prompts are processed in
+    ``prefill_chunk``-token windows that ride the *paged decode kernel*
+    (banded multi-token windows — serve_step.make_paged_step), so a long
+    prompt never stalls running decodes for its full length: each tick runs
+    some prefill chunks AND the batched decode tick.
+
+  * **FCFS with preempt-on-pool-exhaustion.**  Requests start in arrival
+    order.  When the pool can't grow a *running* request for its next
+    decode token, the latest-arrived block holder is preempted — its whole
+    KV is evicted to host (serve.paged.evict_to_host), its blocks freed —
+    and it resumes bit-identically later (the KV is copied back, not
+    recomputed).  Admission and restores never preempt: they wait for
+    genuinely free blocks (two restores evicting each other would thrash
+    without a token of progress), so the oldest request always advances
+    and nothing starves (the pool must hold ≥ one full-length request).
+
+  * **Per-request metrics.**  TTFT (submit → first sampled token) and TPOT
+    (mean inter-token time after the first) from an injectable clock —
+    the serving benchmark's P50/P99 comes from here.
+
+The scheduler is pure policy: it talks to the engine through a small
+primitive surface (``lane_*``, ``alloc``, ``prefill_chunk_run``,
+``decode_tick``, ``evict``/``restore``/``release``) so the decision logic
+is unit-testable without a model (tests/test_paged.py fakes the engine).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class SchedulerConfig:
+    max_batch: int = 8  # concurrent decode lanes
+    prefill_chunk: int = 32  # chunked-prefill window (one jit bucket)
+    # Model tokens processed per tick (decode lanes + prefill chunks);
+    # 0 → max_batch + 2·prefill_chunk (one decode tick + two chunks).
+    token_budget: int = 0
+
+    def budget(self) -> int:
+        return self.token_budget or (self.max_batch + 2 * self.prefill_chunk)
+
+
+@dataclass
+class RequestMetrics:
+    t_submit: float = 0.0
+    t_first_token: float | None = None
+    t_done: float | None = None
+    n_preemptions: int = 0
+
+    @property
+    def ttft(self) -> float | None:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    def tpot(self, n_generated: int) -> float | None:
+        if self.t_done is None or self.t_first_token is None:
+            return None
+        if n_generated <= 1:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (n_generated - 1)
+
+
+@dataclass
+class Entry:
+    """Scheduler-side state for one request (engine's Request rides along)."""
+    req: object  # serve.engine.Request
+    prompt_done: int = 0  # prompt tokens prefilled so far
+    length: int = 0  # live KV tokens in the pool
+    next_token: int | None = None  # sampled, not yet fed to decode
+    lane: int | None = None
+    evicted: bool = False
+    metrics: RequestMetrics = field(default_factory=RequestMetrics)
+
+    @property
+    def uid(self) -> int:
+        return self.req.uid
+
+
+class Scheduler:
+    """FCFS continuous batching with chunked prefill and preemption."""
+
+    def __init__(self, cfg: SchedulerConfig, *, clock=time.perf_counter):
+        self.cfg = cfg
+        self.clock = clock
+        self.waiting: deque[Entry] = deque()
+        self.running: dict[int, Entry] = {}  # lane → entry
+        self.done: list[Entry] = []
+
+    # -- queue ----------------------------------------------------------
+
+    def submit(self, req) -> Entry:
+        e = Entry(req=req)
+        e.metrics.t_submit = self.clock()
+        self.waiting.append(e)
+        return e
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def metrics(self) -> list[dict]:
+        out = []
+        for e in self.done:
+            out.append({
+                "uid": e.uid,
+                "ttft_s": e.metrics.ttft,
+                "tpot_s": e.metrics.tpot(len(e.req.generated)),
+                "n_generated": len(e.req.generated),
+                "n_preemptions": e.metrics.n_preemptions,
+            })
+        return out
+
+    # -- preemption -----------------------------------------------------
+
+    def _requeue(self, victim: Entry) -> None:
+        """Put a preempted entry back into the waiting queue at its ARRIVAL
+        position (by uid).  The queue is always uid-sorted — new arrivals
+        append in uid order and re-insertions bisect — so a just-evicted
+        runner can never jump ahead of an older evicted request already
+        waiting for its restore."""
+        idx = 0
+        for e in self.waiting:
+            if e.uid > victim.uid:
+                break
+            idx += 1
+        self.waiting.insert(idx, victim)
+
+    def _preempt_newest_holder(self, engine, grower: Entry) -> bool:
+        """Evict the latest-arrived request holding pool blocks (vLLM's
+        LIFO victim: the oldest keeps its memory, guaranteeing head-of-line
+        progress) — *including* ``grower`` itself: when the growing request
+        is the newest holder, LIFO demands it self-preempts rather than
+        stealing an older request's memory.  Candidates are the running
+        set plus partially-prefilled waiters (they hold blocks too).
+        Returns True when an eviction freed memory the grower may retry
+        with; False when the grower itself was evicted (stop growing it)
+        or nothing holds blocks."""
+        cands = list(self.running.values()) + [
+            e for e in self.waiting
+            if not e.evicted and engine.holds_blocks(e)
+        ]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda e: e.uid)
+        engine.evict(victim)
+        victim.evicted = True
+        victim.metrics.n_preemptions += 1
+        if victim.lane is not None:
+            del self.running[victim.lane]
+            victim.lane = None
+            self._requeue(victim)
+        # else: a partially-prefilled waiter — already queued in uid order.
+        return victim is not grower
+
+    def _alloc_or_preempt(self, engine, entry: Entry, n_tokens: int) -> bool:
+        """Cover ``n_tokens`` positions for a RUNNING ``entry``, preempting
+        newest block holders until it fits.  Only decode growth preempts:
+        admission and restores wait for genuinely free blocks instead —
+        evicting a runner to admit (or re-admit) another would let two
+        restores thrash evicting each other within one tick, with no token
+        of progress in between.  Returns False when the entry itself got
+        evicted (it was the newest holder) — the caller must skip it."""
+        while not engine.alloc(entry, n_tokens):
+            if not self._preempt_newest_holder(engine, grower=entry):
+                return False
+        return True
+
+    # -- the tick -------------------------------------------------------
+
+    def tick(self, engine) -> list:
+        """One scheduling step.  Returns newly finished Requests."""
+        budget = self.cfg.budget()
+        budget -= len(self.running)  # decode phase reserved first
+        tick_finished: list = []
+
+        # ---- admission / chunked prefill (FCFS head of queue) ----------
+        # The head is POPPED before any allocation: preemption pushes
+        # victims onto the queue front mid-allocation, so indexing the
+        # queue while holding the head would pop the wrong entry.  Any
+        # path that leaves the head unfinished puts it back in front
+        # (it is the oldest entry, so FCFS order is preserved).
+        while budget > 0 and self.waiting and len(self.running) < self.cfg.max_batch:
+            head = self.waiting.popleft()
+            if head.evicted:
+                # Whole-request restore: needs its full block count back,
+                # from genuinely FREE blocks (no preemption — see
+                # _alloc_or_preempt).  Until then the head waits; running
+                # lanes keep finishing and freeing.
+                if not engine.restore(head):
+                    self.waiting.appendleft(head)
+                    break
+                head.evicted = False
+                if head.prompt_done == len(head.req.prompt):
+                    head.lane = engine.free_lane()
+                    self.running[head.lane] = head
+                else:
+                    # Preempted mid-prefill: back in front — the next
+                    # iteration resumes its chunked prefill.
+                    self.waiting.appendleft(head)
+                continue
+            if head.prompt_done == 0 and not engine.can_admit(head):
+                # Admission watermark (vLLM-style): don't start a prompt
+                # unless its whole prefill + one decode-growth block fits
+                # in FREE memory now — admitting on a chunk-by-chunk
+                # basis over-commits the pool and forces later decode-
+                # growth preemptions (evict + restore round-trips that
+                # cost far more than the wait).
+                self.waiting.appendleft(head)
+                break
+            chunk = min(
+                self.cfg.prefill_chunk,
+                len(head.req.prompt) - head.prompt_done,
+                budget,
+            )
+            if chunk <= 0:
+                self.waiting.appendleft(head)
+                break
+            if not engine.alloc(head, head.prompt_done + chunk):
+                # Admission waits for free blocks rather than preempting.
+                self.waiting.appendleft(head)
+                break
+            logits_last = engine.prefill_chunk_run(head, chunk)
+            head.prompt_done += chunk
+            head.length = head.prompt_done
+            budget -= chunk
+            if head.prompt_done == len(head.req.prompt):
+                # Prompt complete: the final chunk's last live row is the
+                # exact last-position distribution → first token now.
+                tok = engine.sample_one(logits_last)
+                head.req.generated.append(tok)
+                head.next_token = tok
+                head.metrics.t_first_token = self.clock()
+                # The first token may already satisfy the stop conditions
+                # (max_new_tokens=1 / eos): finish without a decode tick —
+                # the slot engine's contract, and one saved decode.
+                if (
+                    len(head.req.generated) >= head.req.max_new_tokens
+                    or (head.req.eos_id is not None
+                        and tok == head.req.eos_id)
+                ):
+                    head.req.done = True
+                    head.metrics.t_done = self.clock()
+                    engine.release(head)
+                    self.done.append(head)
+                    tick_finished.append(head.req)
+                    continue
+                head.lane = engine.free_lane()
+                self.running[head.lane] = head
+            else:
+                # Partial prefill: back to the front; the loop (or the
+                # next tick) continues this prompt's chunks first.
+                self.waiting.appendleft(head)
+
+        # ---- decode tick over all running lanes ------------------------
+        finished = tick_finished
+        if self.running:
+            # Decode writes one token at position `length` per lane: make
+            # sure every lane's table covers it (preempting if needed).
+            for lane in sorted(self.running):
+                e = self.running.get(lane)
+                if e is None:
+                    continue
+                if not self._alloc_or_preempt(engine, e, e.length + 1):
+                    if e.evicted:
+                        # The grower was the newest holder and self-
+                        # preempted (LIFO): it decodes after a restore.
+                        continue
+                    # Oldest request alone can't grow: capacity bug — the
+                    # constructor guarantees one full request fits.
+                    raise RuntimeError(
+                        f"request {e.uid} cannot grow to {e.length + 1} "
+                        "tokens with an empty pool"
+                    )
+            if self.running:
+                toks = engine.decode_tick(self.running)
+                now = self.clock()
+                for lane, e in list(self.running.items()):
+                    t = int(toks[lane])
+                    e.req.generated.append(t)
+                    e.next_token = t
+                    e.length += 1
+                    limit = len(e.req.generated) >= e.req.max_new_tokens
+                    hit_eos = (
+                        e.req.eos_id is not None and t == e.req.eos_id
+                    )
+                    full = e.length >= engine.capacity_tokens - 1
+                    if limit or hit_eos or full:
+                        e.req.done = True
+                        e.metrics.t_done = now
+                        engine.release(e)
+                        del self.running[lane]
+                        e.lane = None
+                        self.done.append(e)
+                        finished.append(e.req)
+        return finished

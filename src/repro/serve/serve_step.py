@@ -119,6 +119,97 @@ def make_prefill(cfg, max_len: int):
 # ---------------------------------------------------------------------------
 
 
+def make_paged_step(cfg, width: int):
+    """→ paged_step(params, tokens (B, width), pools, block_tables, pos,
+    count) → (logits (B, width, V), pools).
+
+    One jitted tick of the *paged* serve path (serve.paged pools +
+    kernels/paged_decode.py): ``width = 1`` is the batched decode tick,
+    ``width = chunk`` is one chunked-prefill window — both are the same
+    banded windowed-decode computation, so chunked prefill runs on the
+    decode kernel instead of a separate full-attention prefill graph.
+
+    tokens: (B, width) int32 (right-padded); pos: (B,) absolute start
+    positions; count: (B,) live tokens per row (padding writes are
+    redirected to the garbage block and padded logits are ignored by the
+    caller).  GQA dense/moe families only — the other families keep the
+    slot engine's contiguous caches.
+    """
+    if cfg.family not in ("dense", "moe") or cfg.use_mla:
+        raise NotImplementedError(
+            f"paged serving covers GQA dense/moe; family={cfg.family!r} "
+            f"use_mla={cfg.use_mla} keeps the slot engine"
+        )
+    fused = cfg.attention.distr_decode and cfg.family == "dense"
+
+    def paged_step(params, tokens, pools, block_tables, pos, count):
+        compute = _compute_dtype(cfg)
+        x = layers.embedding_apply(params["embed"], tokens, compute)
+        if cfg.pos == "learned":
+            positions = pos[:, None] + jnp.arange(width)[None, :]
+            x = x + layers.embedding_apply(
+                params["pos_embed"], positions, compute
+            )
+        new_pools = dict(pools)
+
+        if fused:
+            perms = kv_cache.static_perms(cfg)  # (L, Hkv, dh)
+
+            def body_f(h, inputs):
+                lp, v_l, kf_l, perm_l = inputs
+                h, (_, pv, pkf) = transformer.block_paged_decode_apply(
+                    lp, h, cfg, "dense",
+                    pool_k=None, pool_v=v_l, block_tables=block_tables,
+                    pos=pos, count=count, pool_k_fused=kf_l, perm=perm_l,
+                )
+                return h, (pv, pkf)
+
+            x, (vs, kfs) = jax.lax.scan(
+                body_f, x,
+                (params["blocks"], pools["v"], pools["k_fused"], perms),
+            )
+            new_pools.update(v=vs, k_fused=kfs)
+        else:
+
+            def make_body(layer_type):
+                def body(h, inputs):
+                    lp, k_l, v_l = inputs
+                    h, (pk, pv, _) = transformer.block_paged_decode_apply(
+                        lp, h, cfg, layer_type,
+                        pool_k=k_l, pool_v=v_l, block_tables=block_tables,
+                        pos=pos, count=count,
+                    )
+                    return h, (pk, pv)
+
+                return body
+
+            if cfg.family == "moe" and cfg.first_dense_layers:
+                fd = cfg.first_dense_layers
+                x, (kd, vd) = jax.lax.scan(
+                    make_body("dense"), x,
+                    (params["dense_blocks"], pools["k"][:fd], pools["v"][:fd]),
+                )
+                x, (km, vm) = jax.lax.scan(
+                    make_body("moe"), x,
+                    (params["blocks"], pools["k"][fd:], pools["v"][fd:]),
+                )
+                new_pools["k"] = jnp.concatenate([kd, km], axis=0)
+                new_pools["v"] = jnp.concatenate([vd, vm], axis=0)
+            else:
+                layer_type = "moe" if cfg.family == "moe" else "dense"
+                x, (ks, vs) = jax.lax.scan(
+                    make_body(layer_type), x,
+                    (params["blocks"], pools["k"], pools["v"]),
+                )
+                new_pools.update(k=ks, v=vs)
+
+        x = transformer.norm_apply(params["final_norm"], x, cfg)
+        logits = lm.logits_fn(params, cfg, x)
+        return logits, new_pools
+
+    return paged_step
+
+
 def make_decode_step(cfg):
     """→ decode_step(params, tokens (B,1), cache, pos (B,)) → (logits, cache)."""
 

@@ -22,8 +22,10 @@ from repro.tune.autotune import (
     reset_autotuner,
     resolve_block_sizes,
     resolve_decode_block,
+    resolve_paged_decode_block,
     tune_mode,
     warm_engine,
+    warm_paged_engine,
 )
 
 __all__ = [
@@ -39,8 +41,10 @@ __all__ = [
     "reset_autotuner",
     "resolve_block_sizes",
     "resolve_decode_block",
+    "resolve_paged_decode_block",
     "seq_bucket",
     "tune_mode",
     "wall_timer",
     "warm_engine",
+    "warm_paged_engine",
 ]

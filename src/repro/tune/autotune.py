@@ -128,6 +128,71 @@ def decode_candidates(n: int, *, max_block: int = 1024) -> list[int]:
     return cands or [nb]
 
 
+def paged_block_candidates(n: int, *, max_block: int = 512) -> list[int]:
+    """Pool block-size candidates for the paged decode kernel.  The block
+    size is simultaneously the DMA granularity (bigger amortises per-block
+    overhead) and the allocator granularity (smaller wastes less of the
+    last, part-filled block per request) — the right point is empirical,
+    measured on the kernel side here; the fragmentation side is workload
+    policy (serve/scheduler.py)."""
+    nb = min(seq_bucket(n), max_block)
+    cands = [bs for bs in (64, 128, 256, 512) if bs <= nb]
+    return cands or [nb]
+
+
+def _make_run_paged_decode(n, d, dtype, interpret, group_size):
+    """Sweep runner: one request whose block table spans the whole capacity
+    ``n`` — physical blocks deliberately shuffled so the measurement sees
+    real (non-contiguous) table indirection."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    dt = _np_dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    hkv, hq = 1, 2
+    q = jax.random.normal(ks[0], (1, hq, 1, d), jnp.float32).astype(dt)
+    if group_size > 1:
+        from repro.core import grouping
+
+        perm = jnp.broadcast_to(
+            jax.random.permutation(jax.random.PRNGKey(1), d)[None], (hkv, d)
+        ).astype(jnp.int32)
+
+    def make_run(cand):
+        bs = int(cand)
+        mb = -(-n // bs)
+        p = mb + 1  # + the reserved garbage block
+        k_pool = jax.random.normal(
+            ks[1], (p, hkv, bs, d), jnp.float32
+        ).astype(dt)
+        v_pool = jax.random.normal(
+            ks[2], (p, hkv, bs, d), jnp.float32
+        ).astype(dt)
+        bt = jax.random.permutation(
+            jax.random.PRNGKey(2), jnp.arange(1, p, dtype=jnp.int32)
+        )[None, :]
+        lengths = jnp.full((1,), n, jnp.int32)
+        if group_size > 1:
+            from repro.core import grouping
+
+            k_fused = grouping.fuse_columns(
+                k_pool.astype(jnp.float32), perm[None], group_size
+            ).astype(dt)
+            return lambda: ops.paged_decode_attention(
+                q, None, v_pool, block_tables=bt, lengths=lengths,
+                k_fused_pool=k_fused, perm=perm, group_size=group_size,
+                interpret=interpret,
+            )
+        return lambda: ops.paged_decode_attention(
+            q, k_pool, v_pool, block_tables=bt, lengths=lengths,
+            interpret=interpret,
+        )
+
+    return make_run
+
+
 def _analytic_pair(d: int, *, n: int, group_size: int) -> tuple[int, int]:
     nb = min(seq_bucket(n), 1024)
     l, m = select_block_sizes(d, group_size=group_size, max_l=nb, max_m=nb)
@@ -643,6 +708,51 @@ class Autotuner:
         self._memo[memo_key] = bk
         return bk
 
+    def resolve_paged_decode(
+        self,
+        *,
+        d: int,
+        n: int,
+        dtype: str = "bfloat16",
+        group_size: int = 1,
+        interpret: bool | None = None,
+    ) -> int:
+        """Pool block size for the *paged* decode kernel at per-request
+        capacity ``n`` (kernels/paged_decode.py).  Unlike the contiguous
+        split-K knob this is also the allocator granularity — the
+        PagedServeEngine resolves it once at construction (its pools are
+        shaped by it), which doubles as the warm-up: measure-mode sweeps
+        run here, never inside a serving tick."""
+        if interpret is None:
+            interpret = _default_interpret()
+        mode = tune_mode()
+        memo_key = (
+            mode, self.cache.path, "paged_decode", d, seq_bucket(n), dtype,
+            group_size, interpret,
+        )
+        if memo_key in self._memo:
+            return self._memo[memo_key]
+        if mode == "off":
+            bs = min(DEFAULT_BLOCK, seq_bucket(n))
+        elif mode == "analytic":
+            bs = _analytic_decode(n)
+        else:
+            n_meas = self._measure_seq(n, interpret)
+            cands = paged_block_candidates(n_meas)
+            key = cache_key(
+                "paged_decode", backend=_backend_tag(interpret), dtype=dtype,
+                d=d, group_size=group_size, n=n_meas, causal=False,
+            )
+            entry = self._resolve_measured(
+                "paged_decode", key, cands,
+                lambda: _make_run_paged_decode(
+                    n_meas, d, dtype, interpret, group_size
+                ),
+            )
+            bs = int(entry["best"])
+        self._memo[memo_key] = bs
+        return bs
+
     def resolve(
         self,
         kind: str,
@@ -723,6 +833,30 @@ def resolve_block_sizes(kind: str, **kw) -> BlockSizes:
 
 def resolve_decode_block(**kw) -> int:
     return get_autotuner().resolve_decode(**kw)
+
+
+def resolve_paged_decode_block(**kw) -> int:
+    return get_autotuner().resolve_paged_decode(**kw)
+
+
+def warm_paged_engine(cfg, max_len: int) -> dict:
+    """Pre-resolve the block-size keys a PagedServeEngine will hit: the
+    paged-decode pool block (which shapes the pools themselves, so it MUST
+    resolve before construction).  Measure-mode sweeps run here, once —
+    mirroring :func:`warm_engine` for the slot engine.  Returns
+    {site: resolved} for logging."""
+    out: dict = {}
+    if cfg.attention.impl == "reference":
+        return out
+    g = (
+        cfg.attention.distr.group_size if cfg.attention.distr_decode else 1
+    )
+    # Keyed by the KV-pool dtype (bf16, the serve default), like the
+    # contiguous decode key.
+    out["paged_decode"] = get_autotuner().resolve_paged_decode(
+        d=cfg.head_dim_, n=max_len, dtype="bfloat16", group_size=g
+    )
+    return out
 
 
 def warm_engine(cfg, max_len: int, *, buckets=(32, 64, 128, 256, 512, 1024,

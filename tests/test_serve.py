@@ -105,6 +105,61 @@ def test_sampler_modes():
     assert int(t[0]) in (1, 3)  # top-2 restricted
 
 
+def test_sampler_top_p_nucleus():
+    """p = [0.6, 0.3, 0.1]: top_p=0.7 keeps {0, 1} (cum mass before token 2
+    is 0.9 ≥ 0.7); a tiny top_p still keeps the argmax."""
+    p = jnp.asarray([[0.6, 0.3, 0.1]])
+    logits = jnp.log(p)
+    seen = {
+        int(sample(logits, rng=jax.random.PRNGKey(s), temperature=1.0,
+                   top_p=0.7)[0])
+        for s in range(200)
+    }
+    assert seen == {0, 1}
+    assert int(sample(logits, rng=jax.random.PRNGKey(0), temperature=1.0,
+                      top_p=1e-6)[0]) == 0
+
+
+def test_sampler_greedy_ignores_truncation_knobs():
+    """temperature=0 is exact greedy whatever top_k/top_p say — the engine
+    plumbing must not perturb deterministic decoding."""
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    want = jnp.argmax(logits, axis=-1)
+    got = sample(logits, rng=jax.random.PRNGKey(0), temperature=0.0,
+                 top_k=3, top_p=0.5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_engine_sampling_knobs_greedy_equivalence():
+    """ServeEngine(temperature=0, top_k=..., top_p=...) generates exactly
+    the plain greedy engine's tokens (satellite: sampler plumbing)."""
+    cfg = get_config("minicpm-2b", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    outs = []
+    for kw in ({}, {"temperature": 0.0, "top_k": 2, "top_p": 0.5}):
+        eng = ServeEngine(cfg, params, max_slots=1, max_len=64, **kw)
+        eng.add_request([5, 6, 7], max_new_tokens=6)
+        outs.append(eng.run_to_completion()[0].generated)
+    assert outs[0] == outs[1]
+
+
+def test_engine_rejects_prompt_longer_than_max_len():
+    """Regression: a prompt longer than max_len used to crash inside
+    _admit with a numpy shape error (`toks[0, :n] = prompt` against the
+    clamped bucket); it must fail cleanly at submission."""
+    cfg = get_config("minicpm-2b", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.add_request(list(range(17)), max_new_tokens=2)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.add_request([], max_new_tokens=2)
+    # boundary: exactly max_len still admits and decodes
+    eng.add_request(list(range(1, 17)), max_new_tokens=2)
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].generated) == 2
+
+
 def test_fused_k_cache_layout_and_accuracy():
     """Beyond-paper fused-K̂ decode cache: bytes shrink by 1/G* on K and the
     approximate scores track the exact ones."""

@@ -489,3 +489,47 @@ def test_measure_mode_end_to_end(monkeypatch, tmp_path):
     pinned = AttentionConfig(impl="pallas_flash", block_q=256, block_k=256)
     attend_decode(qd, kc, vc, pinned, lengths=lens)
     assert {e["kernel"] for e in json.load(open(path2)).values()} == {"decode"}
+
+
+# ---------------------------------------------------------------------------
+# Paged-decode pool-block tuning (ISSUE 5: tuner key for the paged split)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_decode_resolution_modes(monkeypatch):
+    from repro.tune.autotune import paged_block_candidates
+
+    tuner = Autotuner(timer=_fake_timer_table({}))
+    monkeypatch.setenv("REPRO_TUNE", "off")
+    assert tuner.resolve_paged_decode(d=64, n=1024) == 128
+    monkeypatch.setenv("REPRO_TUNE", "analytic")
+    bs = tuner.resolve_paged_decode(d=64, n=1024)
+    assert bs in paged_block_candidates(1024)
+
+
+def test_paged_decode_measure_caches_and_shapes_engine(monkeypatch, tmp_path):
+    """measure-mode sweep runs the real paged kernel per candidate, persists
+    under the ``paged_decode`` key, and a PagedServeEngine construction
+    (warm_paged_engine) resolves its pool block size from that cache."""
+    monkeypatch.setenv("REPRO_TUNE", "measure")
+    path = str(tmp_path / "paged.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+    cands = [64, 128, 256, 512]
+    table = {c: 1.0 if c != 256 else 0.5 for c in cands}
+    tuner = Autotuner(cache=TuneCache(path), timer=_fake_timer_table(table))
+    reset_autotuner(tuner)
+    bs = tuner.resolve_paged_decode(d=32, n=512, dtype="bfloat16")
+    assert bs == 256
+    cache = json.load(open(path))
+    assert any(k.startswith("paged_decode|") for k in cache)
+
+    # the engine's construction warm-up resolves from the same cache
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve.engine import PagedServeEngine
+
+    cfg = get_config("minicpm-2b", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = PagedServeEngine(cfg, params, max_batch=2, max_len=512)
+    assert eng.block_size == 256
+    assert eng.tuned_blocks["paged_decode"] == 256
