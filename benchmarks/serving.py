@@ -20,6 +20,17 @@ All rows carry backend/interpret labels (CPU-interpret wall time is not
 TPU time; the *structural* claim — more lanes at equal HBM, admission
 every tick — is backend-independent).
 
+A second scenario measures OVERLOAD behaviour (ISSUE 6 acceptance): an
+arrival rate above capacity with per-request deadlines, run with and
+without the graceful-degradation controller.  It uses an injected
+tick-domain clock (one tick per scheduler step), so shed rate,
+deadline-miss rate, and TTFT percentiles are deterministic — wall time on
+CPU-interpret would say nothing about the policy.  The structural claim:
+under the same overload the controller sheds/expires fewer requests and
+cuts p99 TTFT, because degraded whole-prompt prefill (coarser
+DistrAttention grouping) admits a queued prompt in one tick instead of
+ceil(n/chunk) chunked ticks.
+
 Emits ``BENCH_serving.json`` at the repo root and
 ``benchmarks/results/serving.json``.
 """
@@ -82,6 +93,72 @@ def _drive(engine, prompts, max_new):
         "ttft_p99_s": _percentile(ttfts, 99),
         "tpot_mean_s": float(np.mean(tpots)) if tpots else None,
         "n_preemptions": sum(x["n_preemptions"] for x in m),
+    }
+
+
+class _TickClock:
+    """Injectable clock advanced once per scheduler step: deadlines, TTFT
+    and the controller's pressure signal all live in the tick domain."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _overload(cfg, params, *, smoke: bool, degrade):
+    """Arrivals above capacity with deadlines; returns policy metrics."""
+    from repro.serve import lifecycle
+
+    n_requests = 8 if smoke else 24
+    per_tick = 1  # still ≫ service rate: chunked prefill is the bottleneck
+    deadline_ttft, deadline_e2e = 16, 80
+    rng = np.random.RandomState(1)
+    prompts = [list(rng.randint(1, 500, size=int(n)))
+               for n in rng.choice([16, 24, 32, 40], size=n_requests)]
+
+    clock = _TickClock()
+    eng = PagedServeEngine(
+        cfg, params, max_batch=2, max_len=MAX_LEN, block_size=16,
+        num_blocks=1 + 3 * (MAX_LEN // 16), prefill_chunk=8,
+        max_waiting=8, clock=clock, degrade=degrade,
+    )
+    arrivals = list(enumerate(prompts))
+    t0 = time.perf_counter()
+    for _step in range(4000):
+        for _ in range(per_tick):
+            if arrivals:
+                _uid, p = arrivals.pop(0)
+                eng.add_request(p, max_new_tokens=6,
+                                deadline_ttft=deadline_ttft,
+                                deadline_e2e=deadline_e2e)
+        eng.step()
+        clock.t += 1
+        if not arrivals and not eng.scheduler.has_work():
+            break
+    wall = time.perf_counter() - t0
+    assert not eng.scheduler.has_work(), "overload scenario did not drain"
+
+    counters = eng.counters_snapshot()
+    rows = eng.metrics()
+    statuses = [r["status"] for r in rows]
+    ttfts = [r["ttft_s"] for r in rows if r["ttft_s"] is not None]
+    done = sum(s == lifecycle.DONE for s in statuses)
+    return {
+        "n_requests": n_requests,
+        "arrivals_per_tick": per_tick,
+        "deadline_ttft_ticks": deadline_ttft,
+        "deadline_e2e_ticks": deadline_e2e,
+        "completed": done,
+        "shed_rate": counters.get("shed", 0) / n_requests,
+        "deadline_miss_rate": counters.get("expired", 0) / n_requests,
+        "goodput": done / n_requests,
+        "ttft_p50_ticks": _percentile(ttfts, 50) if ttfts else None,
+        "ttft_p99_ticks": _percentile(ttfts, 99) if ttfts else None,
+        "degraded_prefills": counters.get("degraded_prefills", 0),
+        "ticks": clock.t,
+        "wall_s": wall,
     }
 
 
@@ -164,6 +241,36 @@ def run(smoke: bool = False) -> list[tuple]:
         "serving/continuous_vs_slots", 0.0,
         f"paged/slot tokens/s = {speedup:.2f}x at equal HBM "
         f"({hbm_tokens} KV tokens)",
+    ))
+
+    # -- overload: deadlines + shedding, controller off vs on ------------
+    from repro.serve.degrade import DegradeConfig
+
+    dcfg = DegradeConfig(group_sizes=(2, 4), high_watermark=3,
+                         low_watermark=1, up_after=1, down_after=2)
+    overload = {}
+    for mode, degrade in (("exact", None), ("degrade", dcfg)):
+        r = _overload(cfg, params, smoke=smoke, degrade=degrade)
+        overload[mode] = r
+        records.append(dict(
+            kind="overload", controller=mode, max_waiting=8,
+            **r, **backend_info(),
+        ))
+        p99 = r["ttft_p99_ticks"]
+        p99_s = f"{p99:.0f}ticks" if p99 is not None else "n/a"
+        rows.append((
+            f"serving/overload_{mode}", r["wall_s"] * 1e6,
+            f"goodput={r['goodput']:.2f} shed={r['shed_rate']:.2f} "
+            f"miss={r['deadline_miss_rate']:.2f} ttft_p99={p99_s} "
+            f"degraded={r['degraded_prefills']} {timing_label()}",
+        ))
+    rows.append((
+        "serving/overload_controller_effect", 0.0,
+        "goodput {:.2f}->{:.2f}, miss {:.2f}->{:.2f} with degradation dial".format(
+            overload["exact"]["goodput"], overload["degrade"]["goodput"],
+            overload["exact"]["deadline_miss_rate"],
+            overload["degrade"]["deadline_miss_rate"],
+        ),
     ))
 
     if not smoke:

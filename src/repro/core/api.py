@@ -84,6 +84,22 @@ class AttentionConfig:
     def with_impl(self, impl: str) -> "AttentionConfig":
         return replace(self, impl=impl)
 
+    def degraded(self, group_size: int) -> "AttentionConfig":
+        """The overload-degradation dial (serve.degrade): this config with
+        prefill switched onto DistrAttention at grouping fraction
+        1/``group_size``.  ``group_size ≤ 1`` returns the config unchanged
+        (the engine's exact path — degradation is fully reversible).  The
+        Pallas impls degrade to the Pallas distr kernel, the XLA paths to
+        the pure-JAX distr implementation, so the backend family (and its
+        interpret/tuning setup) is preserved; every other knob rides along
+        via ``replace``."""
+        if group_size <= 1:
+            return self
+        impl = "pallas_distr" if self.impl.startswith("pallas") else "distr"
+        return replace(
+            self, impl=impl, distr=replace(self.distr, group_size=group_size)
+        )
+
 
 def _active_context_mesh(context_axis: str | None):
     """The active mesh when it carries a >1-sized ``context_axis``, else

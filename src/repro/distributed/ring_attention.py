@@ -47,6 +47,7 @@ Everything here is a shard_map-level building block in the style of
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass
 
@@ -123,6 +124,32 @@ class _RingMeta:
         return self.n_live % self.shard
 
 
+# -- fault injection (serve.faults catalog point "dead_ring_shard") --------
+#
+# Shards listed here model a dead host mid-ring: its KV shard never arrives
+# at the other devices (the ppermute from that neighbor yields nothing), so
+# every hop h > 0 whose source is a dead shard is skipped and the ring
+# serves a degraded-but-finite result instead of hanging or NaN-ing.  Hop 0
+# (a device's own local KV) always runs — it is resident, not rotated — so
+# no Q row ever loses its softmax diagonal.  Read at trace time: apply the
+# context manager around an untraced call (the chaos suite does), not
+# around an already-jitted function.
+_DEAD_SHARDS: frozenset[int] = frozenset()
+
+
+@contextlib.contextmanager
+def dead_shard_fault(shards):
+    """Treat KV shards in ``shards`` as dead for ring sweeps traced inside
+    the context (graceful-degradation fault injection; see serve.faults)."""
+    global _DEAD_SHARDS
+    prev = _DEAD_SHARDS
+    _DEAD_SHARDS = frozenset(int(s) for s in shards)
+    try:
+        yield
+    finally:
+        _DEAD_SHARDS = prev
+
+
 def _hop_schedule(meta: _RingMeta, idx, h: int):
     """(run, kernel_causal) for hop ``h`` on device ``idx``.
 
@@ -137,6 +164,11 @@ def _hop_schedule(meta: _RingMeta, idx, h: int):
     run = (src * meta.shard < meta.n_live) & (idx * meta.shard < meta.n_live)
     if meta.causal and h > 0:
         run = run & (src < idx)
+    if _DEAD_SHARDS and h > 0:
+        # Injected dead shards (dead_shard_fault): the rotated KV from a
+        # dead source never arrives — skip the hop, keep serving.
+        dead = jnp.asarray(sorted(_DEAD_SHARDS), jnp.int32)
+        run = run & jnp.all(src != dead)
     return src, run, (meta.causal and h == 0)
 
 

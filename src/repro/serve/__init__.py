@@ -1,5 +1,28 @@
 """Serving substrate: KV caches (contiguous ring + paged block pool),
-prefill/decode steps, sampler, engines, continuous-batching scheduler."""
-from repro.serve import engine, kv_cache, paged, sampler, scheduler, serve_step
+prefill/decode steps, sampler, engines, continuous-batching scheduler —
+plus the robustness layer: request lifecycle statuses, deadline/shedding
+policy, the graceful-degradation controller, and fault injection
+(DESIGN.md §Robustness)."""
+from repro.serve import (
+    degrade,
+    engine,
+    faults,
+    kv_cache,
+    lifecycle,
+    paged,
+    sampler,
+    scheduler,
+    serve_step,
+)
 
-__all__ = ["engine", "kv_cache", "paged", "sampler", "scheduler", "serve_step"]
+__all__ = [
+    "degrade",
+    "engine",
+    "faults",
+    "kv_cache",
+    "lifecycle",
+    "paged",
+    "sampler",
+    "scheduler",
+    "serve_step",
+]

@@ -30,23 +30,29 @@ from __future__ import annotations
 
 import itertools
 import time
+from collections import Counter
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import kv_cache
+from repro.serve import kv_cache, lifecycle
+from repro.serve.degrade import DegradationController, DegradeConfig
+from repro.serve.faults import NULL_INJECTOR
+from repro.serve.lifecycle import IncompleteRun
 from repro.serve.sampler import sample
 from repro.serve.serve_step import make_decode_step, make_prefill
 from repro.tune.autotune import warm_engine
 from repro.utils.jax_compat import maybe_set_mesh
 
 
-def _validate_prompt(prompt, limit: int, what: str = "max_len") -> None:
-    """Shared submission-time prompt validation for both engines: a prompt
-    longer than the cache would otherwise shape-error (or silently corrupt
-    KV) deep inside admission."""
+def _validate_request(prompt, limit: int, max_new_tokens: int,
+                      what: str = "max_len") -> None:
+    """Shared submission-time validation for both engines: a prompt longer
+    than the cache would otherwise shape-error (or silently corrupt KV)
+    deep inside admission, and a non-positive ``max_new_tokens`` would
+    decode forever (the ≥-limit stop can never trip)."""
     if len(prompt) > limit:
         raise ValueError(
             f"prompt length {len(prompt)} exceeds the engine's "
@@ -55,6 +61,10 @@ def _validate_prompt(prompt, limit: int, what: str = "max_len") -> None:
         )
     if not prompt:
         raise ValueError("prompt must hold at least one token")
+    if max_new_tokens <= 0:
+        raise ValueError(
+            f"max_new_tokens must be ≥ 1, got {max_new_tokens}"
+        )
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -71,13 +81,24 @@ class Request:
     max_new_tokens: int = 32
     eos_id: int | None = None
     generated: list[int] = field(default_factory=list)
-    done: bool = False
+    done: bool = False  # completed *successfully* (status == "done")
+    # Lifecycle status (serve.lifecycle): every request terminates in
+    # exactly one terminal status; non-terminals are observability.
+    status: str = lifecycle.QUEUED
+    # Deadlines in clock units (seconds for the default wall clock; ticks
+    # for an injected tick clock), relative to submission.  None → none.
+    deadline_ttft: float | None = None
+    deadline_e2e: float | None = None
+    # Grouping fraction G* the prefill actually ran at (1 = exact; > 1 =
+    # degraded under overload — serve.degrade attributes the accuracy cost).
+    degrade_group: int = 1
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, max_slots: int = 8, max_len: int = 512,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
-                 seed: int = 0, mesh=None):
+                 seed: int = 0, mesh=None, clock=None, max_waiting=None,
+                 degrade: DegradeConfig | None = None, faults=None):
         """``mesh``: optional device mesh.  When it carries the axis named
         by ``cfg.attention.context_axis``, long-prompt prefill (sequence ≥
         ring size × 128) runs ring sequence-parallel attention
@@ -97,6 +118,15 @@ class ServeEngine:
         self.top_k = top_k
         self.top_p = top_p
         self.mesh = mesh
+        self.clock = clock or time.perf_counter
+        self.max_waiting = max_waiting
+        if isinstance(degrade, DegradeConfig):
+            degrade = DegradationController(degrade)
+        self.degrade = degrade
+        self.faults = faults or NULL_INJECTOR
+        self.counters: Counter = Counter()
+        self._clock_offset = 0.0  # advanced only by the slow_step fault
+        self._step_tries: dict[int, int] = {}  # uid → faulting-step retries
         self._uid = itertools.count()
         self._rng = jax.random.PRNGKey(seed)
 
@@ -126,32 +156,133 @@ class ServeEngine:
         self._metric_records: dict[int, dict] = {}
 
     # ------------------------------------------------------------------
+    def _now(self) -> float:
+        return self.clock() + self._clock_offset
+
     def add_request(self, prompt: list[int], *, max_new_tokens: int = 32,
-                    eos_id: int | None = None) -> int:
+                    eos_id: int | None = None, deadline_ttft=None,
+                    deadline_e2e=None) -> int:
         # Regression guard: a prompt longer than the cache used to
         # shape-error inside _admit (`toks[0, :n] = prompt` against the
         # clamped max_len bucket); fail cleanly at submission instead.
-        _validate_prompt(prompt, self.max_len)
-        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
+        _validate_request(prompt, self.max_len, max_new_tokens)
+        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id,
+                      deadline_ttft=deadline_ttft, deadline_e2e=deadline_e2e)
+        now = self._now()
+        if (self.max_waiting is not None
+                and len(self.pending) >= self.max_waiting):
+            # Load shedding, reject-newest: accepted requests keep their
+            # latency bound; the verdict is immediate (req.status).
+            self.counters["shed"] += 1
+            self._terminal(req, lifecycle.REJECTED, now, t_submit=now)
+            return req.uid
         self.pending.append(req)
-        self._t_submit[req.uid] = time.perf_counter()
+        self._t_submit[req.uid] = now
         return req.uid
+
+    def cancel(self, uid: int) -> bool:
+        """Terminate ``uid`` immediately, freeing its slot if it holds one.
+        False for unknown / already-terminal uids."""
+        for req in self.pending:
+            if req.uid == uid:
+                self.pending.remove(req)
+                self.counters["cancelled"] += 1
+                self._terminal(req, lifecycle.CANCELLED, self._now())
+                return True
+        for slot, req in list(self.active.items()):
+            if req.uid == uid:
+                self._release_slot(slot)
+                self.counters["cancelled"] += 1
+                self._terminal(req, lifecycle.CANCELLED, self._now())
+                return True
+        return False
+
+    def _terminal(self, req: Request, status: str, now: float, *,
+                  t_submit: float | None = None) -> None:
+        """Move a request to a terminal status and record its metrics row."""
+        req.status = status
+        if t_submit is not None:
+            self._t_submit.setdefault(req.uid, t_submit)
+        self._finish_metrics(req, now)
+        self.finished.append(req)
+
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot mid-flight: pin its garbage decode to one KV block
+        (same reset as natural completion)."""
+        del self.active[slot]
+        self.pos = self.pos.at[slot].set(0)
+        if "length" in self.cache:
+            self.cache["length"] = self.cache["length"].at[slot].set(0)
+
+    def _expire_pass(self, done_now: list) -> None:
+        """Deadline sweep: TTFT deadlines apply while a request waits for
+        admission (its first token lands on the first step after); e2e
+        deadlines apply everywhere."""
+        now = self._now()
+        for req in list(self.pending):
+            waited = now - self._t_submit.get(req.uid, now)
+            if ((req.deadline_ttft is not None and waited > req.deadline_ttft)
+                    or (req.deadline_e2e is not None
+                        and waited > req.deadline_e2e)):
+                self.pending.remove(req)
+                self.counters["expired"] += 1
+                self._terminal(req, lifecycle.EXPIRED, now)
+                done_now.append(req)
+        for slot, req in list(self.active.items()):
+            waited = now - self._t_submit.get(req.uid, now)
+            if req.deadline_e2e is not None and waited > req.deadline_e2e:
+                self._release_slot(slot)
+                self.counters["expired"] += 1
+                self._terminal(req, lifecycle.EXPIRED, now)
+                done_now.append(req)
 
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.max_slots) if s not in self.active]
 
-    def _prefill_fn(self, bucket: int):
-        if bucket not in self._prefills:
-            self._prefills[bucket] = jax.jit(
-                make_prefill(self.cfg, self.max_len)
+    def _prefill_fn(self, bucket: int, group: int = 1):
+        """Jitted prefill keyed by (bucket, G*): G* = 1 is the engine's
+        exact path; G* > 1 runs the backbone under the degraded attention
+        config (serve.degrade) while the cache layout stays the engine's
+        own (make_prefill backbone_cfg)."""
+        key = (bucket, group)
+        if key not in self._prefills:
+            bcfg = None
+            if group > 1:
+                bcfg = self.cfg.replace(
+                    attention=self.cfg.attention.degraded(group)
+                )
+            self._prefills[key] = jax.jit(
+                make_prefill(self.cfg, self.max_len, backbone_cfg=bcfg)
             )
-        return self._prefills[bucket]
+        return self._prefills[key]
 
-    def _admit(self) -> None:
+    def _admit(self, done_now: list) -> None:
+        group = 1
+        if self.degrade is not None:
+            # Pressure signal = backlog depth; one observe per step (admit
+            # runs once per step) keeps the hysteresis tick-domain.
+            level = self.degrade.observe(len(self.pending))
+            group = self.degrade.cfg.group_for(level)
         for slot in self._free_slots():
             if not self.pending:
                 break
             req = self.pending.pop(0)
+            if self.faults.fires("stuck_step", req.uid) is not None:
+                # Bounded retry: the prefill "raised"; requeue at the front
+                # and retry next step, then quarantine just this request.
+                tries = self._step_tries.get(req.uid, 0) + 1
+                self._step_tries[req.uid] = tries
+                self.counters["step_retries"] += 1
+                if tries > 2:
+                    self._step_tries.pop(req.uid, None)
+                    self.counters["failed_fault"] += 1
+                    self._terminal(req, lifecycle.FAILED, self._now())
+                    done_now.append(req)
+                else:
+                    self.pending.insert(0, req)
+                    break
+                continue
+            self._step_tries.pop(req.uid, None)
             n = len(req.prompt)
             bucket = min(_bucket(n), self.max_len)
             toks = np.zeros((1, bucket), np.int32)
@@ -159,9 +290,23 @@ class ServeEngine:
             # Long-prompt prefill rides the context-parallel ring when the
             # engine has a mesh (trace-time dispatch in core.api.attend).
             with maybe_set_mesh(self.mesh):
-                logits, cache1 = self._prefill_fn(bucket)(
+                logits, cache1 = self._prefill_fn(bucket, group)(
                     self.params, jnp.asarray(toks)
                 )
+            # Numeric health guard: a non-finite last-position row means
+            # this prompt's forward blew up — quarantine the request BEFORE
+            # its cache touches the slot; the other slots never notice.
+            row = np.asarray(logits[0, -1], np.float32)
+            if (self.faults.fires("nan_logits", req.uid) is not None
+                    or not np.isfinite(row).all()):
+                self.counters["failed_numeric"] += 1
+                self._terminal(req, lifecycle.FAILED, self._now())
+                done_now.append(req)
+                continue
+            req.degrade_group = group
+            if group > 1:
+                self.counters["degraded_prefills"] += 1
+            req.status = lifecycle.RUNNING
             # NOTE: right-padding shifts the "last" logit for padded prompts;
             # re-read the true last-position logits from position n-1 by
             # decoding from position n with the prompt's last token instead.
@@ -203,10 +348,17 @@ class ServeEngine:
 
     def step(self) -> list[Request]:
         """Admit pending, decode one token for all active slots; returns
-        newly finished requests."""
-        self._admit()
+        newly *terminal* requests (done, expired, or failed this step)."""
+        done_now: list[Request] = []
+        spec = self.faults.fires("slow_step")
+        if spec is not None:
+            # A straggling step ages every in-flight deadline (no wall-
+            # clock sleep needed — the offset rides the injectable clock).
+            self._clock_offset += spec.delay
+        self._expire_pass(done_now)
+        self._admit(done_now)
         if not self.active:
-            return []
+            return done_now
         # advance positions: decode writes at pos+1 (pos = last filled index).
         # Idle slots stay pinned at 0 so their garbage decode keeps walking
         # one KV block instead of growing back toward max_len (serve_step
@@ -215,10 +367,33 @@ class ServeEngine:
         for s in self.active:
             occupied[s] = True
         step_pos = jnp.where(jnp.asarray(occupied), self.pos + 1, 0)
+        for slot, req in list(self.active.items()):
+            if self.faults.fires("stuck_step", req.uid) is not None:
+                # The whole batched decode "raised": retry the step next
+                # call, spending retry budget only on the culprit.
+                tries = self._step_tries.get(req.uid, 0) + 1
+                self._step_tries[req.uid] = tries
+                self.counters["step_retries"] += 1
+                if tries > 2:
+                    self._step_tries.pop(req.uid, None)
+                    self._release_slot(slot)
+                    self.counters["failed_fault"] += 1
+                    self._terminal(req, lifecycle.FAILED, self._now())
+                    done_now.append(req)
+                return done_now
         self._rng, sub = jax.random.split(self._rng)
         logits, self.cache = self._decode(
             self.params, self.tokens, self.cache, step_pos
         )
+        # Per-slot numeric health guard: one device-side reduce + a tiny
+        # host transfer; a non-finite row quarantines exactly that slot.
+        nan_slots = {
+            slot for slot, req in self.active.items()
+            if self.faults.fires("nan_logits", req.uid) is not None
+        }
+        if nan_slots:
+            logits = logits.at[np.array(sorted(nan_slots)), -1].set(jnp.nan)
+        row_ok = np.asarray(jnp.isfinite(logits[:, -1]).all(axis=-1))
         next_tokens = sample(
             logits, rng=sub, temperature=self.temperature,
             top_k=self.top_k, top_p=self.top_p,
@@ -226,15 +401,23 @@ class ServeEngine:
         self.pos = step_pos
         self.tokens = next_tokens[:, None]
 
-        done_now = []
         toks = np.asarray(next_tokens)
-        now = time.perf_counter()
+        now = self._now()
         # Ring caches (GQA, length-tracked) slide past max_len: the ring
         # write evicts the oldest token and the kernels see the live window
         # min(length, max_len).  Other cache layouts (MLA/SSM/hybrid/encdec)
         # have no ring invariant, so their sequences finish before wrap.
         sliding = "length" in self.cache
         for slot, req in list(self.active.items()):
+            if not row_ok[slot]:
+                # Quarantine: the offending slot alone dies; every other
+                # slot's cache row and token are untouched.
+                self._release_slot(slot)
+                self.counters["failed_numeric"] += 1
+                self._terminal(req, lifecycle.FAILED, now)
+                done_now.append(req)
+                continue
+            self._step_tries.pop(req.uid, None)
             t = int(toks[slot])
             req.generated.append(t)
             if len(req.generated) == 1:
@@ -244,23 +427,26 @@ class ServeEngine:
             full = (not sliding) and int(self.pos[slot]) >= self.max_len - 2
             if limit or hit_eos or full:
                 req.done = True
-                self._finish_metrics(req, now)
-                done_now.append(req)
-                self.finished.append(req)
-                del self.active[slot]
                 # Reset the freed slot so its (garbage) decode walks one KV
                 # block, not the dead sequence's full live window.
-                self.pos = self.pos.at[slot].set(0)
-                if "length" in self.cache:
-                    self.cache["length"] = self.cache["length"].at[slot].set(0)
+                self._release_slot(slot)
+                self._terminal(req, lifecycle.DONE, now)
+                done_now.append(req)
         return done_now
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
             self.step()
             if not self.active and not self.pending:
-                break
-        return self.finished
+                return self.finished
+        # Steps exhausted with work in flight: a silent return here let a
+        # hung engine masquerade as success (requests vanished without a
+        # terminal status).
+        raise IncompleteRun(
+            sorted([r.uid for r in self.active.values()]
+                   + [r.uid for r in self.pending]),
+            max_steps,
+        )
 
     def _finish_metrics(self, req: Request, now: float) -> None:
         t0 = self._t_submit.pop(req.uid, None)
@@ -272,7 +458,14 @@ class ServeEngine:
             "tpot_s": None if t1 is None else (now - t1) / max(n - 1, 1),
             "n_generated": n,
             "n_preemptions": 0,
+            "status": req.status,
+            "degrade_group": req.degrade_group,
         }
+
+    def counters_snapshot(self) -> dict:
+        """Robustness counters (shed / expired / cancelled / failed /
+        retries / degraded prefills) — same keys as the paged engine's."""
+        return dict(self.counters)
 
     def metrics(self) -> list[dict]:
         """Per-request TTFT / TPOT (same shape as PagedServeEngine.metrics,
@@ -319,7 +512,9 @@ class PagedServeEngine:
                  block_size: int | None = None, num_blocks: int | None = None,
                  prefill_chunk: int = 32, token_budget: int = 0,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
-                 seed: int = 0, cache_dtype=jnp.bfloat16, clock=None):
+                 seed: int = 0, cache_dtype=jnp.bfloat16, clock=None,
+                 max_waiting=None, degrade: DegradeConfig | None = None,
+                 faults=None):
         from repro.serve import paged
         from repro.serve.scheduler import Scheduler, SchedulerConfig
         from repro.serve.serve_step import make_paged_step
@@ -371,31 +566,47 @@ class PagedServeEngine:
             cfg, num_blocks, self.block_size, dtype=cache_dtype
         )
         self.prefill_chunk = min(prefill_chunk, max_len)
+        self.faults = faults or NULL_INJECTOR
         self.scheduler = Scheduler(
             SchedulerConfig(
                 max_batch=max_batch, prefill_chunk=self.prefill_chunk,
-                token_budget=token_budget,
+                token_budget=token_budget, max_waiting=max_waiting,
             ),
+            degrade=degrade, faults=self.faults,
             **({"clock": clock} if clock is not None else {}),
         )
         self._decode = jax.jit(make_paged_step(cfg, 1))
         self._chunk = jax.jit(make_paged_step(cfg, self.prefill_chunk))
+        self._degraded: dict[tuple[int, int], object] = {}
         self.finished: list[Request] = []
 
     # -- public API (mirrors ServeEngine) --------------------------------
 
     def add_request(self, prompt: list[int], *, max_new_tokens: int = 32,
-                    eos_id: int | None = None) -> int:
+                    eos_id: int | None = None, deadline_ttft=None,
+                    deadline_e2e=None) -> int:
         # The first decode token writes at position len(prompt): a request
         # must leave at least one block-table slot for it (a clamped write
         # at capacity would land inside the LAST live block).
-        _validate_prompt(
+        _validate_request(
             prompt, min(self.max_len, self.capacity_tokens - 1),
-            what="max_len (capacity − 1)",
+            max_new_tokens, what="max_len (capacity − 1)",
         )
-        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id)
-        self.scheduler.submit(req)
+        req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id,
+                      deadline_ttft=deadline_ttft, deadline_e2e=deadline_e2e)
+        if self.scheduler.submit(req) is None:
+            self.finished.append(req)  # shed at the gate (status rejected)
         return req.uid
+
+    def cancel(self, uid: int) -> bool:
+        """Terminate ``uid`` now; its blocks / lane / host copy free in this
+        call, not at the next tick.  False for unknown / terminal uids."""
+        if self.scheduler.cancel(uid, self):
+            e = next(x for x in reversed(self.scheduler.done)
+                     if x.uid == uid)
+            self.finished.append(e.req)
+            return True
+        return False
 
     def step(self) -> list[Request]:
         """One scheduler tick: admission + chunked prefill + batched decode
@@ -408,12 +619,23 @@ class PagedServeEngine:
         for _ in range(max_steps):
             self.step()
             if not self.scheduler.has_work():
-                break
-        return self.finished
+                return self.finished
+        # A silent return here let a hung scheduler masquerade as success.
+        raise IncompleteRun(
+            sorted([e.uid for e in self.scheduler.waiting]
+                   + [e.uid for e in self.scheduler.running.values()]),
+            max_steps,
+        )
 
     def metrics(self) -> list[dict]:
-        """Per-request TTFT / TPOT / preemption counts (scheduler-tracked)."""
+        """Per-request TTFT / TPOT / preemption counts / terminal status /
+        degradation level (scheduler-tracked)."""
         return self.scheduler.metrics()
+
+    def counters_snapshot(self) -> dict:
+        """Robustness counters (shed / expired / cancelled / failed /
+        retries / degraded prefills)."""
+        return dict(self.scheduler.counters)
 
     # -- scheduler primitives --------------------------------------------
 
@@ -426,6 +648,10 @@ class PagedServeEngine:
     def alloc(self, entry, n_tokens: int) -> bool:
         from repro.serve.paged import PoolExhausted
 
+        if self.faults.fires("pool_exhausted", entry.uid) is not None:
+            # Injected allocator failure presents exactly like the real
+            # one: False — the scheduler waits / preempts / watchdogs.
+            return False
         try:
             self.cache.allocate_to(entry.uid, min(n_tokens, self.capacity_tokens))
             return True
@@ -447,6 +673,10 @@ class PagedServeEngine:
     def restore(self, entry) -> bool:
         from repro.serve.paged import PoolExhausted
 
+        # A raise is a restore FAULT (host↔device copy failure — bounded
+        # retry with backoff); a False return is a capacity wait (free
+        # blocks will appear) and costs no retry budget.
+        self.faults.raise_if("restore_failure", entry.uid)
         try:
             self.cache.restore(entry.uid)
             return True
@@ -471,6 +701,8 @@ class PagedServeEngine:
         """One chunked-prefill window for ``entry`` (B = 1 jit bucket);
         returns the last *live* row's logits (exact last-position
         distribution once the prompt completes)."""
+        # Raised BEFORE any pool mutation: a retried chunk re-runs cleanly.
+        self.faults.raise_if("stuck_step", entry.uid)
         start = entry.prompt_done
         toks = np.zeros((1, self.prefill_chunk), np.int32)
         toks[0, :chunk] = entry.req.prompt[start : start + chunk]
@@ -479,12 +711,50 @@ class PagedServeEngine:
             self.params, jnp.asarray(toks), self.cache.pools, bt,
             jnp.asarray([start], jnp.int32), jnp.asarray([chunk], jnp.int32),
         )
-        return logits[0, chunk - 1]
+        row = logits[0, chunk - 1]
+        if self.faults.fires("nan_logits", entry.uid) is not None:
+            row = jnp.full_like(row, jnp.nan)
+        return row
 
-    def decode_tick(self, running: dict) -> np.ndarray:
-        """One batched decode over all running lanes; returns (max_batch,)
-        sampled tokens (garbage on idle lanes — the scheduler only reads
-        occupied ones)."""
+    def _degraded_prefill_fn(self, bucket: int, group: int):
+        from repro.serve.serve_step import make_degraded_paged_prefill
+
+        key = (bucket, group)
+        if key not in self._degraded:
+            self._degraded[key] = jax.jit(
+                make_degraded_paged_prefill(self.cfg, bucket, group)
+            )
+        return self._degraded[key]
+
+    def prefill_full_run(self, entry, group: int) -> jnp.ndarray:
+        """Whole-prompt *degraded* prefill (serve.degrade): one forward
+        under DistrAttention grouping 1/``group`` replaces every exact
+        chunk, scattering the prompt's K/V into the already-allocated
+        blocks; returns the last live row's logits."""
+        self.faults.raise_if("stuck_step", entry.uid)
+        n = len(entry.req.prompt)
+        bucket = min(_bucket(n), self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = entry.req.prompt
+        bt = self.cache.table_array([entry.uid], self.max_blocks)
+        row, self.cache.pools = self._degraded_prefill_fn(bucket, group)(
+            self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32),
+            self.cache.pools, bt,
+        )
+        if self.faults.fires("nan_logits", entry.uid) is not None:
+            row = jnp.full_like(row, jnp.nan)
+        return row
+
+    def decode_tick(self, running: dict) -> tuple[np.ndarray, np.ndarray]:
+        """One batched decode over all running lanes; returns
+        ``(tokens, ok)`` — (max_batch,) sampled tokens (garbage on idle
+        lanes — the scheduler only reads occupied ones) and the numeric
+        health mask (False = that lane's logits went non-finite; the
+        scheduler quarantines exactly that request)."""
+        for e in running.values():
+            # Raised BEFORE the model call (no pool mutated): the retried
+            # tick re-runs cleanly and only the culprit spends budget.
+            self.faults.raise_if("stuck_step", e.uid)
         occupied = np.zeros((self.max_batch,), bool)
         pos = np.zeros((self.max_batch,), np.int32)
         toks = np.zeros((self.max_batch, 1), np.int32)
@@ -500,9 +770,16 @@ class PagedServeEngine:
             self.params, jnp.asarray(toks), self.cache.pools, bt,
             jnp.asarray(pos), count,
         )
+        nan_lanes = [lane for lane, e in running.items()
+                     if self.faults.fires("nan_logits", e.uid) is not None]
+        if nan_lanes:
+            logits = logits.at[np.array(sorted(nan_lanes)), -1].set(jnp.nan)
+        # Numeric health guard: one device-side reduce, one tiny transfer.
+        # Only occupied lanes count (idle lanes decode garbage by design).
+        ok = np.asarray(jnp.isfinite(logits[:, -1]).all(axis=-1)) | ~occupied
         self._rng, sub = jax.random.split(self._rng)
         next_tokens = sample(
             logits[:, -1], rng=sub, temperature=self.temperature,
             top_k=self.top_k, top_p=self.top_p,
         )
-        return np.asarray(next_tokens)
+        return np.asarray(next_tokens), ok

@@ -1,0 +1,58 @@
+"""Request lifecycle: the status state machine shared by both serve engines.
+
+Every request submitted to an engine terminates in exactly one of the
+terminal statuses below — the robustness contract the chaos suite
+(tests/test_chaos.py) asserts under every injected fault.  Transitions
+(DESIGN.md §Robustness):
+
+    queued ──────► prefill ──► running ──► done
+      │  ╲            │    ╲      │  ╲        (eos / max_new_tokens / full)
+      │   ╲           │     ╲     │   └─► preempted ──► prefill/running
+      │    ╲          │      ╲    │            (restore; bit-identical resume)
+      │     ╲         ▼       ▼   ▼
+      │      ╲     expired  failed ◄── numeric guard / watchdog /
+      │       ╲    (deadline)          bounded-retry exhaustion
+      │        └─► cancelled           (any non-terminal state)
+      └──► rejected (bounded-queue load shedding at submit)
+
+``done`` is the only *successful* terminal; ``Request.done`` (bool) keeps
+meaning exactly that.  Non-terminal statuses are advisory (the scheduler
+updates them for observability); terminal statuses are authoritative and
+never overwritten.
+"""
+from __future__ import annotations
+
+# -- non-terminal -----------------------------------------------------------
+QUEUED = "queued"  # submitted, waiting for admission
+PREFILL = "prefill"  # prompt (partially) prefilled, not yet decoding
+RUNNING = "running"  # decoding on a lane / slot
+PREEMPTED = "preempted"  # KV evicted to host, awaiting restore
+
+# -- terminal ---------------------------------------------------------------
+DONE = "done"  # completed normally (eos / max_new_tokens / capacity)
+REJECTED = "rejected"  # load-shed at submission (bounded waiting queue)
+EXPIRED = "expired"  # missed its TTFT or end-to-end deadline
+CANCELLED = "cancelled"  # explicit cancel(uid)
+FAILED = "failed"  # numeric guard / watchdog / retry exhaustion
+
+TERMINAL = frozenset({DONE, REJECTED, EXPIRED, CANCELLED, FAILED})
+
+
+def is_terminal(status: str) -> bool:
+    return status in TERMINAL
+
+
+class IncompleteRun(RuntimeError):
+    """``run_to_completion(max_steps)`` exhausted its step budget with
+    requests still in flight.  Raised instead of returning silently so a
+    hung or livelocked engine can never masquerade as success; ``uids``
+    lists the in-flight requests by uid."""
+
+    def __init__(self, uids: list[int], max_steps: int):
+        self.uids = list(uids)
+        self.max_steps = max_steps
+        super().__init__(
+            f"run_to_completion exhausted {max_steps} steps with "
+            f"{len(self.uids)} request(s) still in flight (uids "
+            f"{self.uids}); raise max_steps or investigate a stall"
+        )

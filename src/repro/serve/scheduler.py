@@ -25,20 +25,57 @@ slab) frees up — admission is *slot*-bound.  This scheduler makes admission
     without a token of progress), so the oldest request always advances
     and nothing starves (the pool must hold ≥ one full-length request).
 
+  * **Request lifecycle control** (serve.lifecycle).  Every request ends in
+    exactly one terminal status: per-request deadlines (TTFT and
+    end-to-end) are checked each tick against the injectable clock
+    (``expired``); a bounded waiting queue sheds the *newest* arrival when
+    full (``rejected``); ``cancel`` frees a request's blocks immediately
+    (``cancelled``); numeric-health and fault failures quarantine exactly
+    the offending request (``failed``) — the batch keeps running.
+
+  * **Graceful degradation** (serve.degrade).  An optional hysteresis
+    controller watches queue depth (and optionally rolling p50 TTFT) and,
+    under sustained overload, switches *new* prompts from exact chunked
+    prefill onto one whole-prompt DistrAttention forward
+    (``engine.prefill_full_run``) at a per-level grouping fraction — TTFT
+    collapses to a single tick at a per-request-recorded accuracy cost —
+    then dials back to exact within ``down_after × max_level`` ticks of the
+    pressure draining.
+
+  * **Fault containment** (serve.faults).  Engine primitives may raise
+    :class:`~repro.serve.faults.InjectedFault` (or its real-world
+    equivalents): a failing model step is retried ``step_max_retries``
+    times before the culprit alone is failed; a failing ``restore`` backs
+    off exponentially (``restore_backoff_ticks`` doubling) for
+    ``restore_max_retries`` attempts.  A *global-stall* watchdog fails the
+    queue head if nothing in the scheduler progressed for
+    ``watchdog_ticks`` consecutive ticks with work present — per-entry
+    watchdogs would shoot legitimately queued requests under overload.
+
   * **Per-request metrics.**  TTFT (submit → first sampled token) and TPOT
     (mean inter-token time after the first) from an injectable clock —
-    the serving benchmark's P50/P99 comes from here.
+    the serving benchmark's P50/P99 comes from here — plus the terminal
+    status and degradation level per request, and scheduler-level
+    ``counters()`` (shed / expired / cancelled / failed / retries /
+    degraded prefills).
 
 The scheduler is pure policy: it talks to the engine through a small
 primitive surface (``lane_*``, ``alloc``, ``prefill_chunk_run``,
-``decode_tick``, ``evict``/``restore``/``release``) so the decision logic
-is unit-testable without a model (tests/test_paged.py fakes the engine).
+``prefill_full_run``, ``decode_tick``, ``evict``/``restore``/``release``)
+so the decision logic is unit-testable without a model (tests/test_paged.py
+and tests/test_chaos.py fake the engine).
 """
 from __future__ import annotations
 
 import time
-from collections import deque
+from collections import Counter, deque
 from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serve.degrade import DegradationController, DegradeConfig
+from repro.serve.faults import NULL_INJECTOR, InjectedFault
+from repro.serve import lifecycle
 
 
 @dataclass
@@ -48,6 +85,24 @@ class SchedulerConfig:
     # Model tokens processed per tick (decode lanes + prefill chunks);
     # 0 → max_batch + 2·prefill_chunk (one decode tick + two chunks).
     token_budget: int = 0
+    # Bounded waiting queue: submissions past this depth are shed
+    # (rejected) instead of queued — reject-newest keeps every accepted
+    # request's latency bounded.  None → unbounded (the historical
+    # behaviour).
+    max_waiting: int | None = None
+    # Global-stall watchdog: ticks with work present but zero progress
+    # anywhere (no chunk, token, restore, admission, or finish) before the
+    # queue head is failed.  Must exceed the restore backoff horizon
+    # (sum of restore_backoff_ticks · 2^k) or the watchdog would fire
+    # mid-backoff.
+    watchdog_ticks: int = 16
+    # Bounded retry-with-backoff for a faulting ``restore`` (raise — a
+    # False return is a capacity wait, not a fault, and costs no retry).
+    restore_max_retries: int = 4
+    restore_backoff_ticks: int = 1  # doubles per attempt
+    # Bounded retry for a faulting model step (prefill chunk / full
+    # prefill / decode tick raising InjectedFault).
+    step_max_retries: int = 2
 
     def budget(self) -> int:
         return self.token_budget or (self.max_batch + 2 * self.prefill_chunk)
@@ -83,6 +138,9 @@ class Entry:
     next_token: int | None = None  # sampled, not yet fed to decode
     lane: int | None = None
     evicted: bool = False
+    restore_tries: int = 0  # consecutive *faulting* restores (not waits)
+    restore_next_tick: int = 0  # backoff: no restore attempt before this
+    step_tries: int = 0  # consecutive faulting model steps
     metrics: RequestMetrics = field(default_factory=RequestMetrics)
 
     @property
@@ -93,20 +151,67 @@ class Entry:
 class Scheduler:
     """FCFS continuous batching with chunked prefill and preemption."""
 
-    def __init__(self, cfg: SchedulerConfig, *, clock=time.perf_counter):
+    def __init__(self, cfg: SchedulerConfig, *, clock=time.perf_counter,
+                 degrade: DegradeConfig | DegradationController | None = None,
+                 faults=NULL_INJECTOR):
         self.cfg = cfg
         self.clock = clock
+        if isinstance(degrade, DegradeConfig):
+            degrade = DegradationController(degrade)
+        self.degrade = degrade
+        self.faults = faults
         self.waiting: deque[Entry] = deque()
         self.running: dict[int, Entry] = {}  # lane → entry
         self.done: list[Entry] = []
+        self.counters: Counter = Counter()
+        self._tick = 0
+        # The slow_step fault (and nothing else) advances this: deadline
+        # checks see submit-relative time self.clock() + offset, so a
+        # straggling step expires requests without wall-clock sleeps.
+        self._clock_offset = 0.0
+        self._stall_ticks = 0
+        self._level = 0  # degradation level chosen this tick
+
+    def _now(self) -> float:
+        return self.clock() + self._clock_offset
 
     # -- queue ----------------------------------------------------------
 
-    def submit(self, req) -> Entry:
+    def submit(self, req) -> Entry | None:
+        """Queue a request — or shed it (status ``rejected``, returns None)
+        when the bounded waiting queue is full.  Reject-newest: accepted
+        requests keep their FCFS position and latency bound; the caller
+        learns the verdict immediately from ``req.status``."""
         e = Entry(req=req)
-        e.metrics.t_submit = self.clock()
+        e.metrics.t_submit = self._now()
+        if (self.cfg.max_waiting is not None
+                and len(self.waiting) >= self.cfg.max_waiting):
+            self.counters["shed"] += 1
+            e.metrics.t_done = e.metrics.t_submit
+            req.status = lifecycle.REJECTED
+            self.done.append(e)
+            return None
+        req.status = lifecycle.QUEUED
         self.waiting.append(e)
         return e
+
+    def cancel(self, uid: int, engine) -> bool:
+        """Terminate ``uid`` now, wherever it is (waiting, mid-prefill,
+        running, or evicted): its blocks / lane / host copy are freed this
+        call, not at the next tick.  Returns False for unknown or already-
+        terminal uids."""
+        for e in list(self.waiting):
+            if e.uid == uid:
+                self.waiting.remove(e)
+                self._finalize(e, engine, lifecycle.CANCELLED)
+                self.counters["cancelled"] += 1
+                return True
+        for e in list(self.running.values()):
+            if e.uid == uid:
+                self._finalize(e, engine, lifecycle.CANCELLED)
+                self.counters["cancelled"] += 1
+                return True
+        return False
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
@@ -120,8 +225,71 @@ class Scheduler:
                 "tpot_s": e.metrics.tpot(len(e.req.generated)),
                 "n_generated": len(e.req.generated),
                 "n_preemptions": e.metrics.n_preemptions,
+                "status": getattr(e.req, "status", lifecycle.DONE),
+                "degrade_group": getattr(e.req, "degrade_group", 1),
             })
         return out
+
+    # -- termination ----------------------------------------------------
+
+    def _finalize(self, e: Entry, engine, status: str) -> None:
+        """Move an entry to its terminal status, freeing whatever it holds
+        (lane, pool blocks, host copy — ``release`` covers all three)."""
+        if e.lane is not None:
+            self.running.pop(e.lane, None)
+            e.lane = None
+        if e.evicted or engine.holds_blocks(e):
+            engine.release(e)
+            e.evicted = False
+        e.req.status = status
+        e.metrics.t_done = self._now()
+        self.done.append(e)
+
+    def _fail(self, e: Entry, engine, kind: str, finished: list) -> None:
+        self._finalize(e, engine, lifecycle.FAILED)
+        self.counters[kind] += 1
+        finished.append(e.req)
+
+    def _expire_pass(self, engine, finished: list) -> bool:
+        """Deadline sweep: TTFT deadlines apply until the first token
+        (entries still waiting / mid-prefill); end-to-end deadlines apply
+        for the whole request.  Running entries always hold a first token
+        (lanes are only assigned after it), so only e2e applies there."""
+        now = self._now()
+        progressed = False
+        for e in list(self.waiting):
+            r = e.req
+            d_ttft = getattr(r, "deadline_ttft", None)
+            d_e2e = getattr(r, "deadline_e2e", None)
+            waited = now - e.metrics.t_submit
+            if (d_ttft is not None and e.metrics.t_first_token is None
+                    and waited > d_ttft) or (d_e2e is not None
+                                             and waited > d_e2e):
+                self.waiting.remove(e)
+                self._finalize(e, engine, lifecycle.EXPIRED)
+                self.counters["expired"] += 1
+                finished.append(r)
+                progressed = True
+        for e in list(self.running.values()):
+            d_e2e = getattr(e.req, "deadline_e2e", None)
+            if d_e2e is not None and now - e.metrics.t_submit > d_e2e:
+                self._finalize(e, engine, lifecycle.EXPIRED)
+                self.counters["expired"] += 1
+                finished.append(e.req)
+                progressed = True
+        return progressed
+
+    def _ttft_p50(self) -> float | None:
+        """Rolling p50 TTFT over the last 32 finished requests (degrade
+        controller signal; None until one finishes)."""
+        vals = [e.metrics.ttft for e in self.done[-32:]
+                if e.metrics.ttft is not None]
+        if not vals:
+            return None
+        return float(np.median(vals))
+
+    def counters_snapshot(self) -> dict:
+        return dict(self.counters)
 
     # -- preemption -----------------------------------------------------
 
@@ -157,6 +325,7 @@ class Scheduler:
         victim = max(cands, key=lambda e: e.uid)
         engine.evict(victim)
         victim.evicted = True
+        victim.req.status = lifecycle.PREEMPTED
         victim.metrics.n_preemptions += 1
         if victim.lane is not None:
             del self.running[victim.lane]
@@ -178,13 +347,72 @@ class Scheduler:
                 return False
         return True
 
+    # -- prompt completion ----------------------------------------------
+
+    def _finish_prompt(self, engine, head: Entry, logits_row,
+                       finished: list) -> None:
+        """Prompt fully prefilled: health-check the last-position logits,
+        sample the first token, and either finish (max_new_tokens=1 / eos)
+        or move to a decode lane."""
+        row = np.asarray(logits_row, np.float32)
+        if not np.isfinite(row).all():
+            # Numeric quarantine: a non-finite distribution poisons only
+            # this request — its blocks free now, the batch keeps running.
+            self._fail(head, engine, "failed_numeric", finished)
+            return
+        tok = engine.sample_one(logits_row)
+        head.req.generated.append(tok)
+        head.next_token = tok
+        head.metrics.t_first_token = self._now()
+        # The first token may already satisfy the stop conditions
+        # (max_new_tokens=1 / eos): finish without a decode tick —
+        # the slot engine's contract, and one saved decode.
+        if (len(head.req.generated) >= head.req.max_new_tokens
+                or (head.req.eos_id is not None
+                    and tok == head.req.eos_id)):
+            head.req.done = True
+            self._finalize(head, engine, lifecycle.DONE)
+            finished.append(head.req)
+            return
+        head.req.status = lifecycle.RUNNING
+        head.lane = engine.free_lane()
+        self.running[head.lane] = head
+
+    def _step_fault(self, engine, e: Entry, finished: list) -> bool:
+        """Bounded retry for a faulting model step.  Returns True when the
+        entry was failed (budget exhausted), False when it should retry."""
+        e.step_tries += 1
+        self.counters["step_retries"] += 1
+        if e.step_tries > self.cfg.step_max_retries:
+            self._fail(e, engine, "failed_fault", finished)
+            return True
+        return False
+
     # -- the tick -------------------------------------------------------
 
     def tick(self, engine) -> list:
-        """One scheduling step.  Returns newly finished Requests."""
+        """One scheduling step.  Returns newly *terminal* Requests — done,
+        expired, cancelled-by-deadline, or failed this tick (rejected and
+        explicitly cancelled requests terminate inside submit()/cancel())."""
+        self._tick += 1
+        finished: list = []
+        progressed = False
+
+        # A straggling step: the injected delay ages every in-flight
+        # deadline before the sweep below.
+        spec = self.faults.fires("slow_step")
+        if spec is not None:
+            self._clock_offset += spec.delay
+
+        progressed |= self._expire_pass(engine, finished)
+
+        if self.degrade is not None:
+            self._level = self.degrade.observe(
+                len(self.waiting), self._ttft_p50()
+            )
+
         budget = self.cfg.budget()
         budget -= len(self.running)  # decode phase reserved first
-        tick_finished: list = []
 
         # ---- admission / chunked prefill (FCFS head of queue) ----------
         # The head is POPPED before any allocation: preemption pushes
@@ -192,23 +420,52 @@ class Scheduler:
         # queue while holding the head would pop the wrong entry.  Any
         # path that leaves the head unfinished puts it back in front
         # (it is the oldest entry, so FCFS order is preserved).
-        while budget > 0 and self.waiting and len(self.running) < self.cfg.max_batch:
+        while (budget > 0 and self.waiting
+               and len(self.running) < self.cfg.max_batch):
             head = self.waiting.popleft()
             if head.evicted:
+                if head.restore_next_tick > self._tick:
+                    # Backing off after a faulting restore: hold the FCFS
+                    # head (younger entries would jump it) — decode lanes
+                    # keep draining meanwhile.
+                    self.waiting.appendleft(head)
+                    break
                 # Whole-request restore: needs its full block count back,
                 # from genuinely FREE blocks (no preemption — see
                 # _alloc_or_preempt).  Until then the head waits; running
                 # lanes keep finishing and freeing.
-                if not engine.restore(head):
+                try:
+                    restored = engine.restore(head)
+                except InjectedFault:
+                    # A raise is a FAULT (host↔device copy failure) and
+                    # spends retry budget; a False return is a capacity
+                    # wait and never does.
+                    head.restore_tries += 1
+                    self.counters["restore_retries"] += 1
+                    if head.restore_tries > self.cfg.restore_max_retries:
+                        self._fail(head, engine, "failed_fault", finished)
+                        progressed = True
+                        continue
+                    head.restore_next_tick = self._tick + (
+                        self.cfg.restore_backoff_ticks
+                        << (head.restore_tries - 1)
+                    )
+                    self.waiting.appendleft(head)
+                    break
+                if not restored:
                     self.waiting.appendleft(head)
                     break
                 head.evicted = False
+                head.restore_tries = 0
+                progressed = True
                 if head.prompt_done == len(head.req.prompt):
+                    head.req.status = lifecycle.RUNNING
                     head.lane = engine.free_lane()
                     self.running[head.lane] = head
                 else:
                     # Preempted mid-prefill: back in front — the next
                     # iteration resumes its chunked prefill.
+                    head.req.status = lifecycle.PREFILL
                     self.waiting.appendleft(head)
                 continue
             if head.prompt_done == 0 and not engine.can_admit(head):
@@ -220,6 +477,35 @@ class Scheduler:
                 # cost far more than the wait).
                 self.waiting.appendleft(head)
                 break
+            if (self._level > 0 and head.prompt_done == 0
+                    and hasattr(engine, "prefill_full_run")):
+                # Degraded admission: one whole-prompt DistrAttention
+                # forward instead of ceil(n/chunk) exact chunks — TTFT
+                # under overload collapses to a single tick, the accuracy
+                # cost is recorded on the request (degrade_group).
+                n = len(head.req.prompt)
+                if not engine.alloc(head, n):
+                    self.waiting.appendleft(head)
+                    break
+                group = self.degrade.group_size
+                head.req.status = lifecycle.PREFILL
+                try:
+                    row = engine.prefill_full_run(head, group)
+                except InjectedFault:
+                    if self._step_fault(engine, head, finished):
+                        progressed = True
+                    else:
+                        self.waiting.appendleft(head)
+                    break
+                head.step_tries = 0
+                head.prompt_done = n
+                head.length = n
+                head.req.degrade_group = group
+                self.counters["degraded_prefills"] += 1
+                budget -= n
+                progressed = True
+                self._finish_prompt(engine, head, row, finished)
+                continue
             chunk = min(
                 self.cfg.prefill_chunk,
                 len(head.req.prompt) - head.prompt_done,
@@ -232,40 +518,30 @@ class Scheduler:
                 # Admission waits for free blocks rather than preempting.
                 self.waiting.appendleft(head)
                 break
-            logits_last = engine.prefill_chunk_run(head, chunk)
+            head.req.status = lifecycle.PREFILL
+            try:
+                logits_last = engine.prefill_chunk_run(head, chunk)
+            except InjectedFault:
+                if self._step_fault(engine, head, finished):
+                    progressed = True
+                else:
+                    self.waiting.appendleft(head)
+                break
+            head.step_tries = 0
             head.prompt_done += chunk
             head.length = head.prompt_done
             budget -= chunk
+            progressed = True
             if head.prompt_done == len(head.req.prompt):
                 # Prompt complete: the final chunk's last live row is the
                 # exact last-position distribution → first token now.
-                tok = engine.sample_one(logits_last)
-                head.req.generated.append(tok)
-                head.next_token = tok
-                head.metrics.t_first_token = self.clock()
-                # The first token may already satisfy the stop conditions
-                # (max_new_tokens=1 / eos): finish without a decode tick —
-                # the slot engine's contract, and one saved decode.
-                if (
-                    len(head.req.generated) >= head.req.max_new_tokens
-                    or (head.req.eos_id is not None
-                        and tok == head.req.eos_id)
-                ):
-                    head.req.done = True
-                    head.metrics.t_done = self.clock()
-                    engine.release(head)
-                    self.done.append(head)
-                    tick_finished.append(head.req)
-                    continue
-                head.lane = engine.free_lane()
-                self.running[head.lane] = head
+                self._finish_prompt(engine, head, logits_last, finished)
             else:
                 # Partial prefill: back to the front; the loop (or the
                 # next tick) continues this prompt's chunks first.
                 self.waiting.appendleft(head)
 
         # ---- decode tick over all running lanes ------------------------
-        finished = tick_finished
         if self.running:
             # Decode writes one token at position `length` per lane: make
             # sure every lane's table covers it (preempting if needed).
@@ -285,24 +561,70 @@ class Scheduler:
                         "tokens with an empty pool"
                     )
             if self.running:
-                toks = engine.decode_tick(self.running)
-                now = self.clock()
-                for lane, e in list(self.running.items()):
-                    t = int(toks[lane])
-                    e.req.generated.append(t)
-                    e.next_token = t
-                    e.length += 1
-                    limit = len(e.req.generated) >= e.req.max_new_tokens
-                    hit_eos = (
-                        e.req.eos_id is not None and t == e.req.eos_id
+                try:
+                    out = engine.decode_tick(self.running)
+                    # Engines return (tokens, ok_mask); legacy fakes
+                    # returning bare tokens get an all-healthy mask.
+                    if isinstance(out, tuple):
+                        toks, ok = out
+                    else:
+                        toks, ok = out, np.ones((len(out),), bool)
+                except InjectedFault as f:
+                    # The whole batched step is lost (nothing was written:
+                    # engines raise before mutating pools) but only the
+                    # culprit spends retry budget; everyone else just
+                    # loses one tick, bounded by step_max_retries.
+                    culprit = next(
+                        (x for x in self.running.values()
+                         if x.uid == f.uid), None,
                     )
-                    full = e.length >= engine.capacity_tokens - 1
-                    if limit or hit_eos or full:
-                        e.req.done = True
-                        e.metrics.t_done = now
-                        engine.release(e)
-                        del self.running[lane]
-                        e.lane = None
-                        self.done.append(e)
-                        finished.append(e.req)
+                    if culprit is not None and self._step_fault(
+                            engine, culprit, finished):
+                        progressed = True
+                else:
+                    now = self._now()
+                    for lane, e in list(self.running.items()):
+                        if not ok[lane]:
+                            # Numeric quarantine: only the offending lane
+                            # dies; the other lanes' KV and tokens are
+                            # untouched (per-row independence).
+                            self._fail(e, engine, "failed_numeric",
+                                       finished)
+                            progressed = True
+                            continue
+                        e.step_tries = 0
+                        t = int(toks[lane])
+                        e.req.generated.append(t)
+                        e.next_token = t
+                        e.length += 1
+                        progressed = True
+                        limit = (len(e.req.generated)
+                                 >= e.req.max_new_tokens)
+                        hit_eos = (
+                            e.req.eos_id is not None and t == e.req.eos_id
+                        )
+                        full = e.length >= engine.capacity_tokens - 1
+                        if limit or hit_eos or full:
+                            e.req.done = True
+                            self._finalize(e, engine, lifecycle.DONE)
+                            finished.append(e.req)
+
+        # ---- global-stall watchdog -------------------------------------
+        # Per-entry no-progress timers would shoot legitimately queued
+        # requests under overload; the global form only fires when NOTHING
+        # moved — a wedged allocator / dead engine — and then fails the
+        # FCFS head (the entry the whole queue is stuck behind).  Failing
+        # it is itself progress, so the counter resets and termination
+        # stays bounded.
+        if progressed or not self.has_work():
+            self._stall_ticks = 0
+        else:
+            self._stall_ticks += 1
+            if self._stall_ticks >= self.cfg.watchdog_ticks:
+                if self.waiting:
+                    victim = self.waiting.popleft()
+                else:
+                    victim = min(self.running.values(), key=lambda x: x.uid)
+                self._fail(victim, engine, "watchdog_fails", finished)
+                self._stall_ticks = 0
         return finished

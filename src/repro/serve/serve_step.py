@@ -33,16 +33,25 @@ def _pad_seq_to(x: jnp.ndarray, max_len: int, axis: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def make_prefill(cfg, max_len: int):
+def make_prefill(cfg, max_len: int, backbone_cfg=None):
     """→ prefill(params, tokens, patches=None, frames=None) → (logits, cache).
 
     logits: (B, 1, V) for the last position; cache: ready for decode at
     position = prompt length.
+
+    ``backbone_cfg`` (default ``cfg``) drives the forward pass alone — the
+    graceful-degradation path (serve.degrade) passes
+    ``cfg.attention.degraded(G*)`` here so prefill attention runs
+    DistrAttention at a coarser grouping while the *cache layout* (dtypes,
+    fused-K̂ width, ring convention) stays exactly the engine's own:
+    approximation enters only through the degraded hidden states, decode is
+    untouched.
     """
+    bcfg = cfg if backbone_cfg is None else backbone_cfg
 
     def prefill(params, tokens, patches=None, frames=None):
         hidden, _aux, parts, n_prefix = lm.backbone(
-            params, cfg, tokens, patches=patches, frames=frames,
+            params, bcfg, tokens, patches=patches, frames=frames,
             collect_cache=True,
         )
         logits = lm.logits_fn(params, cfg, hidden[:, -1:])
@@ -110,6 +119,69 @@ def make_prefill(cfg, max_len: int):
                 (tokens.shape[0],), min(enc_out.shape[1], cfg.cross_len), jnp.int32
             )
         return logits, cache
+
+    return prefill
+
+
+def make_degraded_paged_prefill(cfg, bucket: int, group_size: int):
+    """→ prefill(params, tokens (1, bucket), n (1,), pools, block_tables)
+    → (last-live-row logits (V,), pools).
+
+    The graceful-degradation prefill (serve.degrade): under sustained
+    overload the scheduler trades chunked *exact* prefill for one
+    whole-prompt forward whose attention runs DistrAttention at grouping
+    fraction 1/``group_size`` (``core.api.AttentionConfig.degraded`` — the
+    paper's accuracy↔speed dial), then scatters the resulting K/V into the
+    request's pool blocks through the block table
+    (``models.attention.paged_insert``; padded rows divert to the garbage
+    block).  One step replaces ``ceil(n / prefill_chunk)`` chunk steps —
+    TTFT under pressure drops to a single tick — at an attributable
+    accuracy cost recorded per request (``Request.degrade_group``).
+
+    The KV written is the backbone's own K/V (same convention as the exact
+    paths); approximation enters only through the degraded attention's
+    effect on the hidden states, so decode continues on the standard paged
+    kernels untouched.
+    """
+    if cfg.family not in ("dense", "moe") or cfg.use_mla:
+        raise NotImplementedError(
+            f"paged serving covers GQA dense/moe; family={cfg.family!r} "
+            f"use_mla={cfg.use_mla} keeps the slot engine"
+        )
+    from repro.models.attention import paged_insert
+
+    dcfg = cfg.replace(attention=cfg.attention.degraded(group_size))
+    fused = cfg.attention.distr_decode and cfg.family == "dense"
+
+    def prefill(params, tokens, n, pools, block_tables):
+        hidden, _aux, parts, _ = lm.backbone(
+            params, dcfg, tokens, collect_cache=True
+        )
+        # Exact last-live-position logits: causal attention means padded
+        # rows past n-1 never feed row n-1 (the LSH permutations of the
+        # row's block may see padding — an approximation the degraded path
+        # already accepts).
+        h_last = jnp.take(hidden, n - 1, axis=1)  # (1, 1, d)
+        logits = lm.logits_fn(params, cfg, h_last)[0, 0]
+        k, v = parts["kv"]  # (L, 1, Hkv, bucket, dh)
+        pos0 = jnp.zeros((1,), jnp.int32)
+        insert = jax.vmap(paged_insert, in_axes=(0, 0, None, None, None))
+        new_pools = dict(pools)
+        new_pools["v"] = insert(pools["v"], v, block_tables, pos0, n)
+        if fused:
+            from repro.core import grouping
+
+            g = cfg.attention.distr.group_size
+            perms = kv_cache.static_perms(cfg)  # (L, Hkv, dh)
+            k_f = grouping.fuse_columns(
+                k.astype(jnp.float32), perms[:, None], g
+            )
+            new_pools["k_fused"] = insert(
+                pools["k_fused"], k_f, block_tables, pos0, n
+            )
+        else:
+            new_pools["k"] = insert(pools["k"], k, block_tables, pos0, n)
+        return logits, new_pools
 
     return prefill
 

@@ -53,3 +53,66 @@ def test_failure_detector():
     dead = det.tick()  # 1 and 2 reach 2 missed
     assert set(dead) == {1, 2}
     assert det.alive == [0]
+
+
+def test_failure_detector_dead_worker_stays_dead():
+    """A beat from an already-declared-dead worker must not resurrect it:
+    the controller has reassigned its shards; a zombie rejoin would
+    double-assign them."""
+    det = FailureDetector([0, 1], max_missed=2)
+    det.beat(0)
+    assert det.tick() == []
+    det.beat(0)
+    assert det.tick() == [1]
+    det.beat(1)  # late heartbeat from the dead worker
+    assert det.alive == [0]
+    det.beat(0)
+    assert det.tick() == []  # it is not reported dead twice either
+
+
+def _assert_partition(assignment, num_shards, alive):
+    """Every shard appears exactly once (none orphaned, none duplicated)
+    and only surviving workers own shards."""
+    flat = [s for shards in assignment.values() for s in shards]
+    assert sorted(flat) == list(range(num_shards)), "orphaned/duplicated"
+    assert set(assignment) == set(alive)
+
+
+def test_worker_loss_sequence_keeps_shards_partitioned():
+    """Drive the detector through a cascading-failure sequence and replan
+    shard ownership after each death wave: at every point the data shards
+    stay an exact partition of the surviving workers, and the final plan
+    depends only on the surviving set (restart determinism)."""
+    num_shards = 13
+    det = FailureDetector([0, 1, 2, 3, 4], max_missed=2)
+    plans = [reassign_shards(num_shards, det.alive)]
+    _assert_partition(plans[0], num_shards, [0, 1, 2, 3, 4])
+
+    # wave 1: workers 1 and 3 go silent; the rest keep beating
+    dead = set()
+    for _ in range(2):
+        for w in (0, 2, 4):
+            det.beat(w)
+        dead.update(det.tick())
+    assert dead == {1, 3}
+    plans.append(reassign_shards(num_shards, det.alive))
+    _assert_partition(plans[1], num_shards, [0, 2, 4])
+    for w in (1, 3):
+        assert w not in plans[1], "dead worker still owns shards"
+
+    # wave 2: worker 4 dies too
+    dead = set()
+    for _ in range(2):
+        det.beat(0)
+        det.beat(2)
+        dead.update(det.tick())
+    assert dead == {4}
+    plans.append(reassign_shards(num_shards, det.alive))
+    _assert_partition(plans[2], num_shards, [0, 2])
+
+    # restart determinism: a fresh controller that only knows the final
+    # survivor set reproduces the same plan bit-for-bit
+    assert reassign_shards(num_shards, [2, 0]) == plans[2]
+    # balance survives the cascade (within one shard)
+    sizes = [len(v) for v in plans[2].values()]
+    assert max(sizes) - min(sizes) <= 1
