@@ -1,0 +1,217 @@
+"""Cluster benchmark: routing policies and goodput retention under
+replica loss (ISSUE 7 acceptance).
+
+Three real ``PagedServeEngine`` replicas serve one mixed-length workload
+through ``serve.cluster.ClusterRouter`` on a shared tick-domain clock
+(router and engines see the same injected clock; one router tick = one
+step of every live replica), with per-request end-to-end deadlines — so
+goodput, TTFT percentiles, and failover cost are deterministic and the
+numbers measure the POLICY, not CPU-interpret wall time.
+
+Scenarios:
+
+  healthy/{round_robin,least_queue,p2c}  — routing-policy comparison on an
+      intact cluster: goodput, tokens/s (wall), TTFT p50/p99 in ticks.
+  kill    — replica 1 crashes mid-run (``replica_crash`` fault): the
+      router detects the death via missed heartbeats and redelivers the
+      replica's in-flight requests to survivors as extended prefills.
+      Requests whose remaining deadline cannot absorb the re-prefill
+      expire — the goodput gap vs healthy is the price of the crash.
+  drain   — replica 1 is drained (migrate=True) at the same tick instead:
+      a *planned* removal fences admission and migrates in-flight work
+      immediately, so retention should beat the crash scenario (no
+      heartbeat-detection window).
+
+The summary records ``kill_goodput_retention`` and
+``drain_goodput_retention`` (scenario goodput / healthy round-robin
+goodput) — ``benchmarks/regress.py`` gates the kill number against a
+recorded floor so a failover regression cannot land silently.
+
+Emits ``BENCH_cluster.json`` at the repo root and
+``benchmarks/results/cluster.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import backend_info, save_result, timing_label
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import lifecycle
+from repro.serve.cluster import ClusterRouter
+from repro.serve.engine import PagedServeEngine
+from repro.serve.faults import FaultInjector, FaultSpec
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_cluster.json")
+
+N_REPLICAS = 3
+MAX_LEN = 64
+MAX_BATCH = 2  # lanes per replica
+BLOCK_SIZE = 16
+PREFILL_CHUNK = 8
+MAX_NEW = 5
+DEADLINE_E2E = 60  # ticks; generous for a healthy run, tight across a crash
+DISRUPT_AFTER = 6  # tick of the crash / drain
+POLICIES = ("round_robin", "least_queue", "p2c")
+
+
+class _TickClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _workload(smoke: bool):
+    n = 6 if smoke else 15
+    rng = np.random.RandomState(0)
+    lengths = rng.choice([6, 9, 14, 20, 28], size=n)
+    return [list(rng.randint(1, 500, size=int(ln))) for ln in lengths]
+
+
+def _percentile(xs, p):
+    return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+def _scenario(cfg, params, prompts, *, policy="round_robin", faults=None,
+              drain_rid=None, disrupt_tick=DISRUPT_AFTER,
+              n_replicas=N_REPLICAS, max_new=MAX_NEW):
+    clock = _TickClock()
+    engines = [
+        PagedServeEngine(
+            cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
+            block_size=BLOCK_SIZE, prefill_chunk=PREFILL_CHUNK, clock=clock,
+        )
+        for _ in range(n_replicas)
+    ]
+    router = ClusterRouter(engines, policy=policy, policy_seed=0,
+                           clock=clock, faults=faults)
+    for p in prompts:
+        router.add_request(p, max_new_tokens=max_new,
+                           deadline_e2e=DEADLINE_E2E)
+    t0 = time.perf_counter()
+    for _tick in range(2000):
+        router.tick()
+        clock.t += 1
+        if drain_rid is not None and clock.t == disrupt_tick:
+            router.drain(drain_rid, migrate=True)
+        if not router.has_work():
+            break
+    wall = time.perf_counter() - t0
+    assert not router.has_work(), "cluster scenario did not drain"
+
+    rows = router.metrics()
+    done = sum(r["status"] == lifecycle.DONE for r in rows)
+    tokens = sum(r["n_generated"] for r in rows)
+    ttfts = [r["ttft_s"] for r in rows if r["ttft_s"] is not None]
+    snap = router.counters_snapshot()
+    return {
+        "n_replicas": n_replicas,
+        "n_requests": len(prompts),
+        "deadline_e2e_ticks": DEADLINE_E2E,
+        "completed": done,
+        "goodput": done / len(prompts),
+        "tokens": tokens,
+        "tokens_per_s": tokens / wall,
+        "ttft_p50_ticks": _percentile(ttfts, 50) if ttfts else None,
+        "ttft_p99_ticks": _percentile(ttfts, 99) if ttfts else None,
+        "replica_deaths": snap["replica_deaths"],
+        "redelivered": snap["redelivered"],
+        "migrated": snap["migrated"],
+        "failover_failed": snap["failover_failed"],
+        "expired": sum(r["status"] == lifecycle.EXPIRED for r in rows),
+        "ticks": clock.t,
+        "wall_s": wall,
+    }
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    prompts = _workload(smoke)
+    cfg = get_config("qwen2.5-32b", reduced=True)  # GQA, paged-servable
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    policies = ("round_robin",) if smoke else POLICIES
+    # The smoke workload drains fast: disrupt early so the crash/drain
+    # paths (death detection, redelivery, migration) still execute.
+    disrupt = 2 if smoke else DISRUPT_AFTER
+
+    rows, records = [], []
+
+    # -- healthy cluster: policy comparison -------------------------------
+    healthy = {}
+    for policy in policies:
+        r = _scenario(cfg, params, prompts, policy=policy)
+        healthy[policy] = r
+        records.append(dict(kind="policy", scenario="healthy",
+                            policy=policy, **r, **backend_info()))
+        rows.append((
+            f"cluster/healthy_{policy}", r["wall_s"] * 1e6,
+            f"goodput={r['goodput']:.2f} tok/s={r['tokens_per_s']:.1f} "
+            f"ttft_p50={r['ttft_p50_ticks']:.0f}t "
+            f"ttft_p99={r['ttft_p99_ticks']:.0f}t {timing_label()}",
+        ))
+    base = healthy[policies[0]]
+
+    # -- kill: replica 1 crashes mid-run ----------------------------------
+    kill = _scenario(
+        cfg, params, prompts, policy=policies[0],
+        faults=FaultInjector(
+            [FaultSpec("replica_crash", uid=1, after=disrupt)]
+        ),
+    )
+    records.append(dict(kind="disruption", scenario="kill",
+                        policy=policies[0], disrupt_tick=disrupt,
+                        **kill, **backend_info()))
+    rows.append((
+        "cluster/kill_replica", kill["wall_s"] * 1e6,
+        f"goodput={kill['goodput']:.2f} deaths={kill['replica_deaths']} "
+        f"redelivered={kill['redelivered']} expired={kill['expired']} "
+        f"{timing_label()}",
+    ))
+
+    # -- drain: planned removal of the same replica ------------------------
+    drain = _scenario(cfg, params, prompts, policy=policies[0], drain_rid=1,
+                      disrupt_tick=disrupt)
+    records.append(dict(kind="disruption", scenario="drain",
+                        policy=policies[0], disrupt_tick=disrupt,
+                        **drain, **backend_info()))
+    rows.append((
+        "cluster/drain_replica", drain["wall_s"] * 1e6,
+        f"goodput={drain['goodput']:.2f} migrated={drain['migrated']} "
+        f"expired={drain['expired']} {timing_label()}",
+    ))
+
+    kill_retention = kill["goodput"] / base["goodput"]
+    drain_retention = drain["goodput"] / base["goodput"]
+    records.append(dict(
+        kind="summary",
+        kill_goodput_retention=kill_retention,
+        drain_goodput_retention=drain_retention,
+        healthy_goodput=base["goodput"],
+        kill_goodput=kill["goodput"],
+        drain_goodput=drain["goodput"],
+        n_replicas=N_REPLICAS, disrupt_tick=DISRUPT_AFTER,
+        deadline_e2e_ticks=DEADLINE_E2E, **backend_info(),
+    ))
+    rows.append((
+        "cluster/goodput_retention", 0.0,
+        f"kill={kill_retention:.2f} drain={drain_retention:.2f} "
+        f"(healthy goodput {base['goodput']:.2f})",
+    ))
+
+    if not smoke:
+        save_result("cluster", records)
+        with open(os.path.abspath(BENCH_PATH), "w") as f:
+            json.dump(records, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,130 @@
+"""Reference-bound regression gate over the persisted BENCH_*.json files.
+
+The benchmark JSONs committed at the repo root are the recorded reference
+for structural claims (goodput retention under replica loss, paged-over-
+slot throughput).  This module re-reads them and fails — nonzero exit —
+when a recorded number has dropped below its floor, so a regression in a
+robustness or serving property cannot land silently behind a passing unit
+suite: CI runs ``python -m benchmarks.regress`` right after the benchmark
+smoke pass.
+
+Bounds are declarative: a :class:`Bound` names the file, a record
+selector (``kind`` plus optional extra field matches), the metric, and
+the floor.  Floors are set from the recorded reference run with headroom
+for benign drift — they gate *collapses* (a failover path that stops
+retaining goodput), not noise.  Regenerating a BENCH file with a
+legitimately different trade-off means revisiting the floor here, on
+purpose, in the same commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from dataclasses import dataclass, field
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@dataclass(frozen=True)
+class Bound:
+    """``metric`` of the record matching ``kind`` (+ ``match`` fields) in
+    ``path`` must be ≥ ``floor``."""
+
+    path: str  # BENCH file, relative to the repo root
+    kind: str  # record selector: record["kind"] == kind
+    metric: str
+    floor: float
+    match: tuple = field(default_factory=tuple)  # extra (key, value) pairs
+    note: str = ""
+
+
+#: The recorded floors.  BENCH_cluster.json reference (3 paged replicas,
+#: replica 1 killed at tick 6, 60-tick e2e deadlines): healthy goodput
+#: 1.00, kill retention 1.00, drain retention 1.00 — the deadline budget
+#: absorbs one failover re-prefill.  The floors leave room for workload
+#: tweaks but fail a collapse (lost redelivery → retention ≤ ~0.7).
+BOUNDS = (
+    Bound(
+        path="BENCH_cluster.json", kind="summary",
+        metric="kill_goodput_retention", floor=0.85,
+        note="mid-run replica kill must retain most goodput via failover",
+    ),
+    Bound(
+        path="BENCH_cluster.json", kind="summary",
+        metric="drain_goodput_retention", floor=0.95,
+        note="a planned drain migrates in place; near-zero goodput cost",
+    ),
+    Bound(
+        path="BENCH_serving.json", kind="summary",
+        metric="paged_over_slot_tokens_per_s", floor=1.0,
+        note="continuous batching must not lose to slot serving at equal HBM",
+    ),
+)
+
+
+def _select(records: list[dict], bound: Bound) -> list[dict]:
+    out = []
+    for rec in records:
+        if rec.get("kind") != bound.kind:
+            continue
+        if all(rec.get(k) == v for k, v in bound.match):
+            out.append(rec)
+    return out
+
+
+def check_bound(records: list[dict], bound: Bound) -> list[str]:
+    """Failure messages for one bound against loaded records ([] = pass)."""
+    matches = _select(records, bound)
+    if not matches:
+        return [f"{bound.path}: no kind={bound.kind!r} record "
+                f"matching {dict(bound.match)} (metric {bound.metric})"]
+    failures = []
+    for rec in matches:
+        val = rec.get(bound.metric)
+        if val is None:
+            failures.append(
+                f"{bound.path}: kind={bound.kind!r} record lacks "
+                f"metric {bound.metric!r}"
+            )
+        elif float(val) < bound.floor:
+            failures.append(
+                f"{bound.path}: {bound.metric} = {float(val):.3f} "
+                f"< floor {bound.floor:.3f}"
+                + (f" ({bound.note})" if bound.note else "")
+            )
+    return failures
+
+
+def check_all(bounds=BOUNDS, root: str = ROOT) -> list[str]:
+    """All failure messages across ``bounds`` (missing file = failure:
+    every bounded BENCH file is committed at the repo root)."""
+    failures: list[str] = []
+    by_path: dict[str, list[dict] | None] = {}
+    for bound in bounds:
+        if bound.path not in by_path:
+            full = os.path.join(root, bound.path)
+            try:
+                with open(full) as f:
+                    by_path[bound.path] = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                by_path[bound.path] = None
+                failures.append(f"{bound.path}: unreadable ({e})")
+        records = by_path[bound.path]
+        if records is not None:
+            failures.extend(check_bound(records, bound))
+    return failures
+
+
+def main() -> int:
+    failures = check_all()
+    for msg in failures:
+        print(f"REGRESS FAIL {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print(f"regress: {len(BOUNDS)} bound(s) hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

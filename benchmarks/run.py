@@ -20,6 +20,10 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
   §Paged   serving          — slot engine vs paged continuous batching at
                               equal HBM: tokens/s + P50/P99 TTFT
                               (BENCH_serving.json)
+  §Cluster cluster          — multi-replica router: routing policies +
+                              goodput retention under a mid-run replica
+                              kill vs drain (BENCH_cluster.json; floors
+                              gated by benchmarks/regress.py)
 
 ``--smoke`` runs every benchmark at one tiny shape (interpret mode on this
 container) without touching the persisted JSON results — a CI-grade check
@@ -46,6 +50,7 @@ BENCHES = [
     "distr_decode",
     "decode",
     "serving",
+    "cluster",
 ]
 
 

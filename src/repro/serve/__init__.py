@@ -1,9 +1,11 @@
 """Serving substrate: KV caches (contiguous ring + paged block pool),
 prefill/decode steps, sampler, engines, continuous-batching scheduler —
-plus the robustness layer: request lifecycle statuses, deadline/shedding
-policy, the graceful-degradation controller, and fault injection
-(DESIGN.md §Robustness)."""
+plus the robustness layer (request lifecycle statuses, deadline/shedding
+policy, the graceful-degradation controller, fault injection; DESIGN.md
+§Robustness) and the multi-replica cluster tier (health-aware router
+with failover and draining; DESIGN.md §Cluster tier)."""
 from repro.serve import (
+    cluster,
     degrade,
     engine,
     faults,
@@ -16,6 +18,7 @@ from repro.serve import (
 )
 
 __all__ = [
+    "cluster",
     "degrade",
     "engine",
     "faults",

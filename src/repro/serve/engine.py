@@ -462,10 +462,22 @@ class ServeEngine:
             "degrade_group": req.degrade_group,
         }
 
+    def has_work(self) -> bool:
+        return bool(self.active or self.pending)
+
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (cluster-router health signal)."""
+        return len(self.pending)
+
+    def degrade_level(self) -> int:
+        """Current degradation-controller level (0 = exact / no controller)."""
+        return 0 if self.degrade is None else self.degrade.level
+
     def counters_snapshot(self) -> dict:
-        """Robustness counters (shed / expired / cancelled / failed /
-        retries / degraded prefills) — same keys as the paged engine's."""
-        return dict(self.counters)
+        """Robustness counters, frozen to ``lifecycle.COUNTER_KEYS`` (zero-
+        filled) — the exact key set the paged engine and scheduler report,
+        so the cluster router's health model can diff snapshots blindly."""
+        return lifecycle.counters_view(self.counters)
 
     def metrics(self) -> list[dict]:
         """Per-request TTFT / TPOT (same shape as PagedServeEngine.metrics,
@@ -633,9 +645,21 @@ class PagedServeEngine:
         return self.scheduler.metrics()
 
     def counters_snapshot(self) -> dict:
-        """Robustness counters (shed / expired / cancelled / failed /
-        retries / degraded prefills)."""
-        return dict(self.scheduler.counters)
+        """Robustness counters, frozen to ``lifecycle.COUNTER_KEYS`` (the
+        slot engine reports the identical key set)."""
+        return self.scheduler.counters_snapshot()
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (cluster-router health signal)."""
+        return len(self.scheduler.waiting)
+
+    def degrade_level(self) -> int:
+        """Current degradation-controller level (0 = exact / no controller)."""
+        d = self.scheduler.degrade
+        return 0 if d is None else d.level
 
     # -- scheduler primitives --------------------------------------------
 

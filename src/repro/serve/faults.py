@@ -32,6 +32,13 @@ Fault-point catalog (DESIGN.md §Robustness):
                     ``distributed.ring_attention.dead_shard_fault`` — the
                     ring skips the shard's hops and serves a degraded but
                     finite result.
+  replica_crash     an entire engine replica's process dies (models OOM
+                    kill / host loss in the multi-replica tier); consulted
+                    by ``serve.cluster.ClusterRouter`` once per tick per
+                    replica with ``uid`` = the REPLICA id — the replica
+                    stops heartbeating, the router detects the death after
+                    ``heartbeat_misses`` ticks and redelivers its in-flight
+                    requests to survivors.
 
 Triggers are *counted*: a :class:`FaultSpec` fires on hits
 ``after ≤ hit < after + times`` of its point (per matching uid), so a
@@ -49,6 +56,7 @@ POINTS = (
     "restore_failure",
     "slow_step",
     "dead_ring_shard",
+    "replica_crash",
 )
 
 

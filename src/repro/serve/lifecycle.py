@@ -42,6 +42,38 @@ def is_terminal(status: str) -> bool:
     return status in TERMINAL
 
 
+# -- frozen observability schema --------------------------------------------
+# The cluster router's health model (serve.cluster) reads these dicts from
+# every replica; silent key drift between the engines would blind it.  Both
+# engines and the scheduler snapshot against THIS key set (zero-filled), and
+# tests/test_cluster.py freezes it with a regression test.  Adding a counter
+# means adding it here, on purpose.
+
+#: Robustness counters common to ServeEngine, PagedServeEngine, Scheduler.
+COUNTER_KEYS = (
+    "shed",  # load-shed at submission (bounded waiting queue)
+    "expired",  # missed a TTFT / e2e deadline
+    "cancelled",  # explicit cancel(uid)
+    "failed_numeric",  # non-finite logits quarantined
+    "failed_fault",  # step/restore retry budget exhausted
+    "step_retries",  # faulting model steps retried in place
+    "restore_retries",  # faulting restores retried with backoff
+    "watchdog_fails",  # global-stall watchdog fired
+    "degraded_prefills",  # prompts served under coarser grouping
+)
+
+#: Per-request metrics() row keys shared by both engines and the scheduler.
+METRIC_KEYS = (
+    "uid", "ttft_s", "tpot_s", "n_generated", "n_preemptions", "status",
+    "degrade_group",
+)
+
+
+def counters_view(counters) -> dict:
+    """Freeze a Counter/dict into the canonical zero-filled schema."""
+    return {k: int(counters.get(k, 0)) for k in COUNTER_KEYS}
+
+
 class IncompleteRun(RuntimeError):
     """``run_to_completion(max_steps)`` exhausted its step budget with
     requests still in flight.  Raised instead of returning silently so a

@@ -289,7 +289,9 @@ class Scheduler:
         return float(np.median(vals))
 
     def counters_snapshot(self) -> dict:
-        return dict(self.counters)
+        """Frozen to ``lifecycle.COUNTER_KEYS`` (zero-filled): the schema
+        the cluster router's health model reads — see lifecycle.py."""
+        return lifecycle.counters_view(self.counters)
 
     # -- preemption -----------------------------------------------------
 

@@ -64,6 +64,60 @@ def test_injector_uid_filter_and_dead_shards():
     assert ei.value.point == "stuck_step" and ei.value.uid == 4
 
 
+def test_fault_spec_counts_hits_per_matching_uid():
+    """A uid-filtered spec counts hits only on consultations that match:
+    interleaved other-uid traffic must not advance its window."""
+    inj = FaultInjector([FaultSpec("nan_logits", uid=1, after=2, times=1)])
+    fired = []
+    for _ in range(4):  # interleave uid 0 and uid 1 consultations
+        inj.fires("nan_logits", uid=0)  # never matches, never counts
+        fired.append(inj.fires("nan_logits", uid=1) is not None)
+    # uid 1's own hits are 0,1,2,3 → fires exactly on its third hit.
+    assert fired == [False, False, True, False]
+    # An unrestricted spec, by contrast, counts every consultation.
+    inj = FaultInjector([FaultSpec("nan_logits", after=2, times=1)])
+    seen = [inj.fires("nan_logits", uid=u) is not None
+            for u in (0, 1, 0, 1)]
+    assert seen == [False, False, True, False]
+
+
+def test_multiple_specs_on_one_point():
+    """Several specs may watch one point: every matching spec counts the
+    hit, the FIRST whose window covers it is returned — so staggered
+    windows hand off deterministically and overlaps don't double-fire."""
+    a = FaultSpec("stuck_step", after=0, times=2)
+    b = FaultSpec("stuck_step", after=1, times=3)
+    inj = FaultInjector([a, b])
+    winners = []
+    for _ in range(5):
+        s = inj.fires("stuck_step")
+        winners.append(None if s is None else ("a" if s is a else "b"))
+    # hit 0: only a's window; hit 1: both → a (listed first); hits 2-3:
+    # a exhausted → b; hit 4: both exhausted.
+    assert winners == ["a", "a", "b", "b", None]
+    # Exhaustion is permanent: further consultations stay quiet.
+    assert inj.fires("stuck_step") is None
+    # uid-filtered + unfiltered specs on one point: the filtered spec
+    # only wins consultations it matches.
+    u = FaultSpec("pool_exhausted", uid=5, times=-1)
+    g = FaultSpec("pool_exhausted", after=1, times=-1)
+    inj = FaultInjector([u, g])
+    assert inj.fires("pool_exhausted", uid=3) is None  # g's hit 0 (after=1)
+    assert inj.fires("pool_exhausted", uid=5) is u
+    assert inj.fires("pool_exhausted", uid=3) is g
+
+
+def test_replica_crash_point_in_catalog():
+    """The cluster tier's fault point rides the same counted-trigger
+    plumbing: uid carries the REPLICA id (serve.cluster consults it once
+    per tick per replica)."""
+    inj = FaultInjector([FaultSpec("replica_crash", uid=1, after=2)])
+    assert inj.fires("replica_crash", uid=0) is None
+    fired = [inj.fires("replica_crash", uid=1) is not None
+             for _ in range(4)]
+    assert fired == [False, False, True, False]
+
+
 # ---------------------------------------------------------------------------
 # Degradation controller (serve.degrade)
 # ---------------------------------------------------------------------------
