@@ -60,6 +60,25 @@ BOUNDS = (
         metric="paged_over_slot_tokens_per_s", floor=1.0,
         note="continuous batching must not lose to slot serving at equal HBM",
     ),
+    # BENCH_train_chaos.json reference (S=24 steps, checkpoint every 6,
+    # kill at 14): kill resumes at 12 → goodput 0.923; a torn latest
+    # checkpoint falls back to 6 → goodput 0.750; both resumes match the
+    # uninterrupted loss trajectory bit-exactly (1.0).
+    Bound(
+        path="BENCH_train_chaos.json", kind="summary",
+        metric="kill_steps_retained_goodput", floor=0.85,
+        note="a mid-run kill must only replay back to the latest checkpoint",
+    ),
+    Bound(
+        path="BENCH_train_chaos.json", kind="summary",
+        metric="torn_steps_retained_goodput", floor=0.65,
+        note="a torn latest checkpoint falls back one cadence, not to step 0",
+    ),
+    Bound(
+        path="BENCH_train_chaos.json", kind="summary",
+        metric="resume_loss_match", floor=0.999,
+        note="resume must reproduce the uninterrupted loss trajectory exactly",
+    ),
 )
 
 

@@ -24,6 +24,11 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
                               goodput retention under a mid-run replica
                               kill vs drain (BENCH_cluster.json; floors
                               gated by benchmarks/regress.py)
+  §Train   train_chaos      — checkpoint-resume goodput under a mid-run
+                              kill, with the latest checkpoint healthy vs
+                              torn, plus bit-exact resume-loss match
+                              (BENCH_train_chaos.json; floors gated by
+                              benchmarks/regress.py)
 
 ``--smoke`` runs every benchmark at one tiny shape (interpret mode on this
 container) without touching the persisted JSON results — a CI-grade check
@@ -51,6 +56,7 @@ BENCHES = [
     "decode",
     "serving",
     "cluster",
+    "train_chaos",
 ]
 
 

@@ -1,0 +1,184 @@
+"""Train-chaos benchmark: checkpoint-resume goodput under mid-run kills
+(ISSUE 8 acceptance).
+
+One real reduced-config Trainer on the deterministic synthetic stream,
+driven through two disruption scenarios against an uninterrupted baseline:
+
+  baseline     — train S steps straight (periodic checkpoints every E).
+  kill_resume  — kill the process at step k (no final save), restart from
+      the workdir: resume lands on the newest *verified* checkpoint r and
+      re-trains k−r steps it had already done.  ``steps_retained_goodput``
+      = S / (S + (k − r)) — the fraction of total step work that was not
+      thrown away.
+  torn_resume  — same kill, but the latest checkpoint published torn
+      (``ckpt_torn_write`` at its step): resume must *fall back* to the
+      newest checkpoint that verifies, paying a bigger replay window but
+      never resuming garbage.
+
+Because model init and the data stream are deterministic, a correct resume
+is bit-identical to the baseline — ``resume_loss_match`` records the
+fraction of per-step losses that match exactly, and the summary's
+``steps_retained_goodput``/``resume_loss_match`` floors are gated by
+``benchmarks/regress.py`` so a resume regression (checkpoint cadence
+silently broken, fallback resuming garbage) cannot land behind passing
+unit tests.
+
+Emits ``BENCH_train_chaos.json`` at the repo root and
+``benchmarks/results/train_chaos.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import backend_info, save_result
+from repro.configs import get_config
+from repro.faults import FaultInjector, FaultSpec
+from repro.train.anomaly import AnomalyConfig
+from repro.train.data import SyntheticLMData
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer
+
+BENCH_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_train_chaos.json"
+)
+
+TOTAL_STEPS = 24   # S: target step count of every scenario
+CKPT_EVERY = 6     # E: periodic checkpoint cadence
+KILL_AT = 14       # k: the mid-run kill lands between checkpoints 12 and 18
+
+
+def _trainer(workdir: str, ckpt_every: int, faults=None) -> Trainer:
+    cfg = get_config("minicpm-2b", reduced=True)
+    opt = OptimizerConfig(peak_lr=1e-3, warmup_steps=2,
+                          total_steps=TOTAL_STEPS)
+    data = SyntheticLMData(cfg.vocab, 2, 16, seed=0)
+    return Trainer(cfg, opt, data, workdir=workdir, log_every=10_000,
+                   ckpt_every=ckpt_every, faults=faults,
+                   anomaly=AnomalyConfig(enabled=False))
+
+
+def _train_to(tr: Trainer, target: int) -> None:
+    while tr.step < target:
+        tr.step_once()
+
+
+def _loss_match(hist: list[dict], baseline: dict[int, float]) -> float:
+    """Fraction of history records whose loss EXACTLY matches the baseline
+    at the same step (determinism makes ≈ the wrong tool)."""
+    if not hist:
+        return 0.0
+    hits = sum(1 for r in hist if baseline.get(r["step"]) == r["loss"])
+    return hits / len(hist)
+
+
+def _scenario(total: int, ckpt_every: int, kill_at: int, baseline_losses,
+              *, torn: bool) -> dict:
+    workdir = tempfile.mkdtemp(prefix="bench_train_chaos_")
+    try:
+        faults = None
+        if torn:
+            # tear the newest pre-kill checkpoint as it publishes
+            torn_step = (kill_at // ckpt_every) * ckpt_every
+            faults = FaultInjector(
+                [FaultSpec("ckpt_torn_write", uid=torn_step)]
+            )
+        t0 = time.perf_counter()
+        first = _trainer(workdir, ckpt_every, faults=faults)
+        _train_to(first, kill_at)
+        del first  # the "kill": no final/emergency save happens
+
+        resumed = _trainer(workdir, ckpt_every)
+        resume_step = resumed.step
+        _train_to(resumed, total)
+        wall = time.perf_counter() - t0
+
+        replay = kill_at - resume_step
+        return {
+            "total_steps": total,
+            "ckpt_every": ckpt_every,
+            "kill_at": kill_at,
+            "resume_step": resume_step,
+            "recovery_steps": replay,
+            "steps_retained_goodput": total / (total + replay),
+            "resume_loss_match": _loss_match(resumed.history,
+                                             baseline_losses),
+            "torn_ckpt_fallbacks":
+                resumed.counters_snapshot()["torn_ckpt_fallbacks"],
+            "wall_s": wall,
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    total = 6 if smoke else TOTAL_STEPS
+    every = 2 if smoke else CKPT_EVERY
+    kill_at = 5 if smoke else KILL_AT
+
+    # -- uninterrupted baseline (also the reference loss trajectory) ------
+    workdir = tempfile.mkdtemp(prefix="bench_train_chaos_")
+    try:
+        t0 = time.perf_counter()
+        base = _trainer(workdir, every)
+        _train_to(base, total)
+        base_wall = time.perf_counter() - t0
+        baseline_losses = {r["step"]: r["loss"] for r in base.history}
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    kill = _scenario(total, every, kill_at, baseline_losses, torn=False)
+    torn = _scenario(total, every, kill_at, baseline_losses, torn=True)
+    assert torn["resume_step"] < kill["resume_step"] or smoke, \
+        "torn latest checkpoint must force a deeper fallback"
+
+    records = [
+        dict(kind="baseline", total_steps=total, ckpt_every=every,
+             wall_s=base_wall, **backend_info()),
+        dict(kind="scenario", scenario="kill_resume", **kill,
+             **backend_info()),
+        dict(kind="scenario", scenario="torn_resume", **torn,
+             **backend_info()),
+        dict(
+            kind="summary",
+            kill_steps_retained_goodput=kill["steps_retained_goodput"],
+            torn_steps_retained_goodput=torn["steps_retained_goodput"],
+            resume_loss_match=min(kill["resume_loss_match"],
+                                  torn["resume_loss_match"]),
+            kill_recovery_steps=kill["recovery_steps"],
+            torn_recovery_steps=torn["recovery_steps"],
+            total_steps=total, ckpt_every=every, kill_at=kill_at,
+            **backend_info(),
+        ),
+    ]
+
+    rows = [
+        (
+            "train_chaos/kill_resume", kill["wall_s"] * 1e6,
+            f"goodput={kill['steps_retained_goodput']:.3f} "
+            f"resume@{kill['resume_step']} replay={kill['recovery_steps']} "
+            f"loss_match={kill['resume_loss_match']:.3f}",
+        ),
+        (
+            "train_chaos/torn_resume", torn["wall_s"] * 1e6,
+            f"goodput={torn['steps_retained_goodput']:.3f} "
+            f"resume@{torn['resume_step']} replay={torn['recovery_steps']} "
+            f"fallbacks={torn['torn_ckpt_fallbacks']} "
+            f"loss_match={torn['resume_loss_match']:.3f}",
+        ),
+    ]
+
+    if not smoke:
+        save_result("train_chaos", records)
+        with open(os.path.abspath(BENCH_PATH), "w") as f:
+            json.dump(records, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,195 @@
+"""Deterministic fault injection shared by the serving and training tiers.
+
+Production failure modes don't show up in happy-path tests, so both serve
+engines and the training stack expose **named fault points** that an
+injected :class:`FaultInjector` can fire deterministically — the chaos
+suites (tests/test_chaos.py, tests/test_cluster.py, tests/test_train_chaos.py)
+drive each one and assert every request / training run still terminates in
+an explicit, recoverable state with no leaked resources.
+
+The catalog is split per domain; :data:`POINTS` is the union a
+:class:`FaultSpec` validates against.
+
+Serve points (DESIGN.md §Robustness, §Cluster tier):
+
+  pool_exhausted    block-pool allocation fails even though blocks are free
+                    (models fragmentation / a buggy allocator under load);
+                    fired inside ``PagedServeEngine.alloc``.
+  nan_logits        a request's logits row is poisoned with NaN (models a
+                    numerical blow-up in the model step); fired wherever
+                    logits are produced (decode tick, prefill chunk, slot
+                    decode) — exercises the numeric health guards.
+  stuck_step        a model step raises instead of returning (models a hung
+                    or crashed device call surfacing as an error); the
+                    scheduler retries the culprit a bounded number of times
+                    then fails it.  Raised as :class:`InjectedFault`.
+  restore_failure   ``restore`` of a preempted request's KV raises (models
+                    a host↔device copy failure); retried with exponential
+                    backoff, bounded, then the request fails.
+  slow_step         the scheduler's clock jumps forward by ``delay``
+                    seconds (models a straggling step) — exercises the
+                    deadline-expiry path without wall-clock sleeps.
+  dead_ring_shard   a ring context-parallel KV shard never arrives at its
+                    consumers (models a dead host mid-ring); implemented as
+                    ``distributed.ring_attention.dead_shard_fault`` — the
+                    ring skips the shard's hops and serves a degraded but
+                    finite result.
+  replica_crash     an entire engine replica's process dies (models OOM
+                    kill / host loss in the multi-replica tier); consulted
+                    by ``serve.cluster.ClusterRouter`` once per tick per
+                    replica with ``uid`` = the REPLICA id — the replica
+                    stops heartbeating, the router detects the death after
+                    ``heartbeat_misses`` ticks and redelivers its in-flight
+                    requests to survivors.
+
+Train points (DESIGN.md §Training robustness):
+
+  ckpt_torn_write     a checkpoint publishes with corrupt bytes (models bit
+                      rot / a lying fsync / a partial flush that the atomic
+                      rename alone cannot catch); consulted once per
+                      ``train.checkpoint.save_checkpoint`` with ``uid`` =
+                      the STEP being saved — the published directory fails
+                      manifest verification and resume/rollback falls back
+                      to the newest *verified* checkpoint.
+  nan_grad            the loss goes non-finite inside the jitted step
+                      (models a numerical blow-up); the in-step NaN guard
+                      suppresses the update and the Trainer counts a skip
+                      (``nan_policy`` decides skip vs halt).
+  loss_spike          the reported loss/grad-norm jump by ``scale``×
+                      (default 64) without the update being suppressed
+                      (models silent divergence — bad lr region, corrupt
+                      activations); the EWMA/z-score anomaly guard rolls
+                      params+opt back to the last verified checkpoint and
+                      advances the data stream past the offending window.
+  worker_loss         a training worker stops heartbeating for good
+                      (``uid`` = the WORKER id); consulted once per
+                      supervisor tick per worker — the FailureDetector
+                      declares it dead, the supervisor replans the mesh to
+                      the survivor count and restores from the last
+                      verified checkpoint.
+  slow_worker         a worker's simulated step time grows by ``delay``
+                      (``uid`` = the WORKER id); feeds the supervisor's
+                      per-worker step-time tracking — the StragglerPolicy
+                      flags it and, after ``patience`` consecutive flags,
+                      the worker is excluded via the same elastic path.
+  data_shard_corrupt  a batch arrives with scrambled labels (models a
+                      corrupt data shard / reader bug); the resulting loss
+                      excursion is the anomaly guard's problem — rollback
+                      re-trains past the window on the advanced stream.
+
+Triggers are *counted*: a :class:`FaultSpec` fires on hits
+``after ≤ hit < after + times`` of its point (per matching uid), so a
+fault can be transient (``times=2``) or persistent (``times=-1``) and every
+run is reproducible — including across a rollback, where re-executed steps
+keep counting consults and an exhausted spec does not re-fire.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+#: Fault points consulted by the serving tier (engines, scheduler, router).
+SERVE_POINTS = (
+    "pool_exhausted",
+    "nan_logits",
+    "stuck_step",
+    "restore_failure",
+    "slow_step",
+    "dead_ring_shard",
+    "replica_crash",
+)
+
+#: Fault points consulted by the training tier (checkpoint, Trainer,
+#: TrainSupervisor).
+TRAIN_POINTS = (
+    "ckpt_torn_write",
+    "nan_grad",
+    "loss_spike",
+    "worker_loss",
+    "slow_worker",
+    "data_shard_corrupt",
+)
+
+#: The full catalog a FaultSpec validates against.
+POINTS = SERVE_POINTS + TRAIN_POINTS
+
+
+class InjectedFault(Exception):
+    """An injected failure surfacing through an engine primitive.  Carries
+    the fault point and the culprit uid so the scheduler can retry / fail
+    exactly the affected request and keep the batch alive."""
+
+    def __init__(self, point: str, uid: int | None = None):
+        self.point = point
+        self.uid = uid
+        super().__init__(f"injected fault {point!r} (uid={uid})")
+
+
+@dataclass
+class FaultSpec:
+    """One deterministic trigger: fire ``point`` for hits ``after ≤ hit <
+    after + times`` (``times=-1`` → forever), optionally restricted to one
+    request / worker / step (``uid``).  ``delay`` is the clock jump for
+    ``slow_step`` and the step-time inflation for ``slow_worker``;
+    ``scale`` the loss multiplier for ``loss_spike`` (0 → the trainer's
+    default); ``shards`` the dead set for ``dead_ring_shard``."""
+
+    point: str
+    uid: int | None = None
+    after: int = 0
+    times: int = 1
+    delay: float = 0.0
+    scale: float = 0.0
+    shards: tuple[int, ...] = ()
+    _hits: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.point not in POINTS:
+            raise ValueError(
+                f"unknown fault point {self.point!r}; catalog: {POINTS}"
+            )
+
+    def _matches(self, uid: int | None) -> bool:
+        return self.uid is None or uid == self.uid
+
+    def _hit(self) -> bool:
+        """Count one hit; True when this hit is inside the firing window."""
+        h = self._hits
+        self._hits += 1
+        if h < self.after:
+            return False
+        return self.times < 0 or h < self.after + self.times
+
+
+class FaultInjector:
+    """A set of :class:`FaultSpec` triggers consulted at engine fault
+    points.  ``fires(point, uid)`` counts one hit on every matching spec
+    and returns the first spec whose window covers it (None otherwise) —
+    pure host-side bookkeeping, deterministic across runs."""
+
+    def __init__(self, specs: list[FaultSpec] | tuple[FaultSpec, ...] = ()):
+        self.specs = list(specs)
+
+    def fires(self, point: str, uid: int | None = None) -> FaultSpec | None:
+        fired = None
+        for s in self.specs:
+            if s.point == point and s._matches(uid):
+                if s._hit() and fired is None:
+                    fired = s
+        return fired
+
+    def raise_if(self, point: str, uid: int | None = None) -> None:
+        if self.fires(point, uid) is not None:
+            raise InjectedFault(point, uid)
+
+    def dead_shards(self) -> frozenset[int]:
+        """Union of shard ids across active ``dead_ring_shard`` specs (for
+        wiring into ``distributed.ring_attention.dead_shard_fault``)."""
+        out: set[int] = set()
+        for s in self.specs:
+            if s.point == "dead_ring_shard":
+                out.update(s.shards)
+        return frozenset(out)
+
+
+#: Engines default to this — zero per-tick overhead when nothing is injected.
+NULL_INJECTOR = FaultInjector(())

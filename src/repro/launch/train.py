@@ -18,6 +18,7 @@ import jax
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch.mesh import make_host_mesh
+from repro.train.anomaly import AnomalyConfig
 from repro.train.data import BinaryShardData, SyntheticLMData
 from repro.train.optimizer import OptimizerConfig
 from repro.train.trainer import Trainer
@@ -45,6 +46,19 @@ def main() -> None:
                          "sequence length scales with this instead of HBM "
                          "per chip")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--anomaly-z", type=float, default=8.0,
+                    help="z-score threshold of the loss/grad-norm spike "
+                         "detector (rolls back to the last verified "
+                         "checkpoint; 0 disables the guard)")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="consecutive no-progress anomaly rollbacks before "
+                         "the run halts (AnomalyHalt)")
+    ap.add_argument("--supervise", type=int, default=0, metavar="N",
+                    help="run under TrainSupervisor with N simulated "
+                         "workers: heartbeat failure detection, straggler "
+                         "exclusion, remesh + verified-checkpoint restore "
+                         "on worker loss (0 = plain Trainer)")
     ap.add_argument("--tune", choices=["off", "analytic", "measure"],
                     default=None,
                     help="block-size autotuning mode (sets REPRO_TUNE; "
@@ -104,9 +118,23 @@ def main() -> None:
         data = SyntheticLMData(cfg.vocab, args.batch, args.seq, seed=args.seed)
 
     os.makedirs(args.workdir, exist_ok=True)
+    anomaly = AnomalyConfig(
+        enabled=args.anomaly_z > 0,
+        z_threshold=args.anomaly_z or 8.0,
+        max_rollbacks=args.max_rollbacks,
+    )
     trainer = Trainer(cfg, opt_cfg, data, workdir=args.workdir, mesh=mesh,
-                      seed=args.seed)
-    hist = trainer.run(args.steps)
+                      seed=args.seed, ckpt_every=args.ckpt_every,
+                      anomaly=anomaly)
+    if args.supervise > 0:
+        from repro.train.supervisor import TrainSupervisor
+
+        sup = TrainSupervisor(trainer, num_workers=args.supervise,
+                              model_parallel=args.model_parallel)
+        hist = sup.run(args.steps)
+        print(f"[train] supervisor counters: {sup.counters_snapshot()}")
+    else:
+        hist = trainer.run(args.steps)
     if hist:
         print(f"[train] done: loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f} "
               f"over {len(hist)} steps")

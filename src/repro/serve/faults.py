@@ -1,139 +1,30 @@
-"""Fault injection for the serving tier: named failure points with
-deterministic triggers.
+"""Serve-tier re-export shim over the shared fault-injection machinery.
 
-Production failure modes don't show up in happy-path tests, so both serve
-engines expose a small set of **named fault points** that an injected
-:class:`FaultInjector` can fire deterministically — the chaos suite
-(tests/test_chaos.py) drives each one and asserts every request still
-terminates with an explicit lifecycle status (serve.lifecycle) and no pool
-block leaks.
-
-Fault-point catalog (DESIGN.md §Robustness):
-
-  pool_exhausted    block-pool allocation fails even though blocks are free
-                    (models fragmentation / a buggy allocator under load);
-                    fired inside ``PagedServeEngine.alloc``.
-  nan_logits        a request's logits row is poisoned with NaN (models a
-                    numerical blow-up in the model step); fired wherever
-                    logits are produced (decode tick, prefill chunk, slot
-                    decode) — exercises the numeric health guards.
-  stuck_step        a model step raises instead of returning (models a hung
-                    or crashed device call surfacing as an error); the
-                    scheduler retries the culprit a bounded number of times
-                    then fails it.  Raised as :class:`InjectedFault`.
-  restore_failure   ``restore`` of a preempted request's KV raises (models
-                    a host↔device copy failure); retried with exponential
-                    backoff, bounded, then the request fails.
-  slow_step         the scheduler's clock jumps forward by ``delay``
-                    seconds (models a straggling step) — exercises the
-                    deadline-expiry path without wall-clock sleeps.
-  dead_ring_shard   a ring context-parallel KV shard never arrives at its
-                    consumers (models a dead host mid-ring); implemented as
-                    ``distributed.ring_attention.dead_shard_fault`` — the
-                    ring skips the shard's hops and serves a degraded but
-                    finite result.
-  replica_crash     an entire engine replica's process dies (models OOM
-                    kill / host loss in the multi-replica tier); consulted
-                    by ``serve.cluster.ClusterRouter`` once per tick per
-                    replica with ``uid`` = the REPLICA id — the replica
-                    stops heartbeating, the router detects the death after
-                    ``heartbeat_misses`` ticks and redelivers its in-flight
-                    requests to survivors.
-
-Triggers are *counted*: a :class:`FaultSpec` fires on hits
-``after ≤ hit < after + times`` of its point (per matching uid), so a
-fault can be transient (``times=2``) or persistent (``times=-1``) and every
-run is reproducible.
+The :class:`FaultInjector`/:class:`FaultSpec` machinery started life here
+(PR 6) and was promoted to :mod:`repro.faults` when training grew its own
+fault points — the serving tier's catalog is ``repro.faults.SERVE_POINTS``
+and the full documentation lives on the shared module.  Every existing
+``repro.serve.faults`` import keeps working through this shim; new code
+should import from :mod:`repro.faults` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
-POINTS = (
-    "pool_exhausted",
-    "nan_logits",
-    "stuck_step",
-    "restore_failure",
-    "slow_step",
-    "dead_ring_shard",
-    "replica_crash",
+from repro.faults import (  # noqa: F401
+    NULL_INJECTOR,
+    POINTS,
+    SERVE_POINTS,
+    TRAIN_POINTS,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
 )
 
-
-class InjectedFault(Exception):
-    """An injected failure surfacing through an engine primitive.  Carries
-    the fault point and the culprit uid so the scheduler can retry / fail
-    exactly the affected request and keep the batch alive."""
-
-    def __init__(self, point: str, uid: int | None = None):
-        self.point = point
-        self.uid = uid
-        super().__init__(f"injected fault {point!r} (uid={uid})")
-
-
-@dataclass
-class FaultSpec:
-    """One deterministic trigger: fire ``point`` for hits ``after ≤ hit <
-    after + times`` (``times=-1`` → forever), optionally restricted to one
-    request (``uid``).  ``delay`` is the clock jump for ``slow_step``;
-    ``shards`` the dead set for ``dead_ring_shard``."""
-
-    point: str
-    uid: int | None = None
-    after: int = 0
-    times: int = 1
-    delay: float = 0.0
-    shards: tuple[int, ...] = ()
-    _hits: int = field(default=0, repr=False)
-
-    def __post_init__(self):
-        if self.point not in POINTS:
-            raise ValueError(
-                f"unknown fault point {self.point!r}; catalog: {POINTS}"
-            )
-
-    def _matches(self, uid: int | None) -> bool:
-        return self.uid is None or uid == self.uid
-
-    def _hit(self) -> bool:
-        """Count one hit; True when this hit is inside the firing window."""
-        h = self._hits
-        self._hits += 1
-        if h < self.after:
-            return False
-        return self.times < 0 or h < self.after + self.times
-
-
-class FaultInjector:
-    """A set of :class:`FaultSpec` triggers consulted at engine fault
-    points.  ``fires(point, uid)`` counts one hit on every matching spec
-    and returns the first spec whose window covers it (None otherwise) —
-    pure host-side bookkeeping, deterministic across runs."""
-
-    def __init__(self, specs: list[FaultSpec] | tuple[FaultSpec, ...] = ()):
-        self.specs = list(specs)
-
-    def fires(self, point: str, uid: int | None = None) -> FaultSpec | None:
-        fired = None
-        for s in self.specs:
-            if s.point == point and s._matches(uid):
-                if s._hit() and fired is None:
-                    fired = s
-        return fired
-
-    def raise_if(self, point: str, uid: int | None = None) -> None:
-        if self.fires(point, uid) is not None:
-            raise InjectedFault(point, uid)
-
-    def dead_shards(self) -> frozenset[int]:
-        """Union of shard ids across active ``dead_ring_shard`` specs (for
-        wiring into ``distributed.ring_attention.dead_shard_fault``)."""
-        out: set[int] = set()
-        for s in self.specs:
-            if s.point == "dead_ring_shard":
-                out.update(s.shards)
-        return frozenset(out)
-
-
-#: Engines default to this — zero per-tick overhead when nothing is injected.
-NULL_INJECTOR = FaultInjector(())
+__all__ = [
+    "NULL_INJECTOR",
+    "POINTS",
+    "SERVE_POINTS",
+    "TRAIN_POINTS",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+]

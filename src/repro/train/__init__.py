@@ -1,20 +1,25 @@
-"""Training substrate: optimizer, data, checkpointing, compression, trainer."""
+"""Training substrate: optimizer, data, checkpointing, compression, trainer,
+anomaly guard, elastic supervisor."""
 from repro.train import (
+    anomaly,
     checkpoint,
     compression,
     data,
     elastic,
     optimizer,
+    supervisor,
     train_step,
     trainer,
 )
 
 __all__ = [
+    "anomaly",
     "checkpoint",
     "compression",
     "data",
     "elastic",
     "optimizer",
+    "supervisor",
     "train_step",
     "trainer",
 ]

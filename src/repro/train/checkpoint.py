@@ -1,13 +1,40 @@
-"""Mesh-agnostic checkpointing with atomic rename + keep-k + resume.
+"""Mesh-agnostic checkpointing with verified integrity + keep-k + resume.
 
 Checkpoints store full (unsharded) tensors keyed by pytree path, so a job can
 restart on a different device count / mesh shape — the elasticity story: the
 restore path simply device_puts onto whatever shardings the new mesh derives.
-Writes go to ``<dir>/tmp.<step>`` then ``os.replace`` to ``step_<N>`` so a
-crash mid-save never corrupts the latest checkpoint.
+
+Durability and integrity (DESIGN.md §Training robustness):
+
+* **Atomic, durable publish** — writes go to ``<dir>/tmp.<step>``, every
+  file is fsync'd (the ``tune/cache.py`` idiom), then ``os.replace`` to the
+  final name and an fsync of the parent directory.  A crash mid-save never
+  tears the *latest* checkpoint.
+* **Per-array checksum manifest** — ``manifest.json`` records a sha256 over
+  (dtype, shape, bytes) of every saved array.  :func:`verify_checkpoint`
+  re-hashes on load, so bit rot, a lying fsync, or a partially flushed
+  ``.npz`` is *detected* instead of silently resuming garbage.
+* **Verified fallback** — :func:`load_checkpoint` walks checkpoints newest →
+  oldest and resumes from the newest one that verifies; the number of
+  torn/corrupt checkpoints it skipped is reported in
+  ``meta["_fallback_skipped"]`` so callers can count the event.
+* **GC never orphans the last verified checkpoint** — keep-k trims old
+  directories but always protects the newest checkpoint that passes
+  verification, even when every newer one is torn.
+* **Tag-suffixed names** — emergency / halt saves publish as
+  ``step_<N>-<tag>`` so they can never clobber a good periodic checkpoint
+  written at the same step; at equal step the untagged (periodic/final)
+  checkpoint is preferred on resume.
+
+Fault injection: ``save_checkpoint(..., faults=...)`` consults the shared
+``ckpt_torn_write`` point (``uid`` = the step) once per save and, when it
+fires, truncates ``params.npz`` *before* publishing — the checkpoint lands
+on disk looking complete but fails verification, which is exactly the
+failure the manifest exists to catch.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -15,6 +42,17 @@ import shutil
 
 import jax
 import numpy as np
+
+from repro.faults import NULL_INJECTOR
+
+MANIFEST_NAME = "manifest.json"
+
+_NAME_RE = re.compile(r"step_(\d+)(?:-([A-Za-z0-9_.\-]+))?")
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed integrity verification (missing files, torn
+    archive bytes, or a per-array checksum mismatch)."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -45,6 +83,45 @@ def _unflatten_into(template, flat: dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
+def _array_digest(arr: np.ndarray) -> str:
+    """sha256 over (dtype, shape, bytes) — a reshape or dtype flip with the
+    same byte stream must not verify."""
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(tuple(arr.shape)).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _fsync_file(path: str) -> None:
+    with open(path, "rb") as f:
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - non-POSIX
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def checkpoint_name(step: int, tag: str = "") -> str:
+    if tag and not re.fullmatch(r"[A-Za-z0-9_.\-]+", tag):
+        raise ValueError(f"checkpoint tag {tag!r} must be filename-safe")
+    return f"step_{step:08d}" + (f"-{tag}" if tag else "")
+
+
+def step_of(name: str) -> int:
+    m = _NAME_RE.fullmatch(name)
+    if not m:
+        raise ValueError(f"not a checkpoint name: {name!r}")
+    return int(m.group(1))
+
+
 def save_checkpoint(
     ckpt_dir: str,
     step: int,
@@ -54,49 +131,167 @@ def save_checkpoint(
     *,
     extra_meta: dict | None = None,
     keep: int = 3,
+    tag: str = "",
+    faults=None,
 ) -> str:
+    faults = faults or NULL_INJECTOR
     os.makedirs(ckpt_dir, exist_ok=True)
-    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    name = checkpoint_name(step, tag)
+    tmp = os.path.join(ckpt_dir, f"tmp.{name}")
+    final = os.path.join(ckpt_dir, name)
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+    manifest: dict = {"format": 1, "arrays": {}}
+    flat_p = _flatten(params)
+    np.savez(os.path.join(tmp, "params.npz"), **flat_p)
+    manifest["arrays"]["params.npz"] = {
+        k: _array_digest(v) for k, v in flat_p.items()
+    }
     if opt_state is not None:
-        np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
-    meta = {"step": step, "data_state": data_state or {}}
+        flat_o = _flatten(opt_state)
+        np.savez(os.path.join(tmp, "opt_state.npz"), **flat_o)
+        manifest["arrays"]["opt_state.npz"] = {
+            k: _array_digest(v) for k, v in flat_o.items()
+        }
+    meta = {"step": step, "data_state": data_state or {}, "tag": tag}
     meta.update(extra_meta or {})
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+    with open(os.path.join(tmp, MANIFEST_NAME), "w") as f:
+        json.dump(manifest, f)
+
+    # Durability before publish: fsync every payload file, then the tmp dir
+    # itself, so the rename below can never expose half-flushed contents.
+    for fname in os.listdir(tmp):
+        _fsync_file(os.path.join(tmp, fname))
+    _fsync_dir(tmp)
+
+    if faults.fires("ckpt_torn_write", uid=step) is not None:
+        # Injected torn write: the checkpoint publishes with truncated array
+        # bytes — complete-looking on disk, caught only by verification.
+        ppath = os.path.join(tmp, "params.npz")
+        size = os.path.getsize(ppath)
+        with open(ppath, "r+b") as f:
+            f.truncate(max(size // 2, 1))
 
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic publish
+    _fsync_dir(ckpt_dir)
     _gc(ckpt_dir, keep)
     return final
 
 
-def _gc(ckpt_dir: str, keep: int) -> None:
-    steps = list_checkpoints(ckpt_dir)
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+def list_checkpoint_names(ckpt_dir: str) -> list[str]:
+    """All checkpoint directory names, sorted so the LAST entry is the
+    preferred resume candidate: ascending by step, and at equal step the
+    untagged (periodic/final) checkpoint sorts after tagged (emergency)
+    ones."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    names = []
+    for name in os.listdir(ckpt_dir):
+        m = _NAME_RE.fullmatch(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            names.append(name)
+    return sorted(names, key=lambda n: (step_of(n), _NAME_RE.fullmatch(n).group(2) is None))
 
 
 def list_checkpoints(ckpt_dir: str) -> list[int]:
-    if not os.path.isdir(ckpt_dir):
-        return []
-    steps = []
-    for name in os.listdir(ckpt_dir):
-        m = re.fullmatch(r"step_(\d+)", name)
-        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
-            steps.append(int(m.group(1)))
-    return sorted(steps)
+    """Distinct checkpoint steps, ascending (tag-agnostic)."""
+    return sorted({step_of(n) for n in list_checkpoint_names(ckpt_dir)})
 
 
 def latest_step(ckpt_dir: str) -> int | None:
     steps = list_checkpoints(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def verify_checkpoint(path: str) -> list[str]:
+    """Integrity problems of one checkpoint directory ([] = verified).
+
+    Checks: meta.json parses, the manifest exists and parses, every file it
+    names loads, and every array matches its recorded sha256.  A checkpoint
+    written before the manifest format (or with any torn/rotted bytes) does
+    NOT verify.
+    """
+    problems: list[str] = []
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"meta.json unreadable: {e}"]
+    try:
+        with open(os.path.join(path, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        arrays = manifest["arrays"]
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        return [f"{MANIFEST_NAME} unreadable: {e}"]
+    for fname, digests in arrays.items():
+        fpath = os.path.join(path, fname)
+        try:
+            with np.load(fpath) as npz:
+                keys = set(npz.files)
+                missing = set(digests) - keys
+                if missing:
+                    problems.append(f"{fname}: missing arrays {sorted(missing)}")
+                for key in sorted(set(digests) & keys):
+                    if _array_digest(npz[key]) != digests[key]:
+                        problems.append(f"{fname}: checksum mismatch for {key!r}")
+        except Exception as e:  # noqa: BLE001 - torn zip bytes raise zoo-wide
+            problems.append(f"{fname}: unreadable ({e!r})")
+    return problems
+
+
+def is_verified(path: str) -> bool:
+    return not verify_checkpoint(path)
+
+
+def latest_verified_name(ckpt_dir: str) -> str | None:
+    """Newest checkpoint directory that passes verification (None if every
+    checkpoint — or the directory itself — is missing/corrupt)."""
+    for name in reversed(list_checkpoint_names(ckpt_dir)):
+        if is_verified(os.path.join(ckpt_dir, name)):
+            return name
+    return None
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    """Keep-k trim that can never delete the last verified checkpoint.
+
+    Verification runs newest-first and stops at the first verified name, so
+    the common all-healthy case hashes exactly one checkpoint.
+    """
+    names = list_checkpoint_names(ckpt_dir)
+    keep_names = set(names[-keep:]) if keep > 0 else set()
+    protected = None
+    for name in reversed(names):
+        if is_verified(os.path.join(ckpt_dir, name)):
+            protected = name
+            break
+    if protected is not None:
+        keep_names.add(protected)
+    for name in names:
+        if name not in keep_names:
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+def _load_dir(path: str, params_template, opt_template):
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    params = _unflatten_into(
+        params_template, dict(np.load(os.path.join(path, "params.npz")))
+    )
+    opt_state = None
+    if opt_template is not None and os.path.exists(
+        os.path.join(path, "opt_state.npz")
+    ):
+        opt_state = _unflatten_into(
+            opt_template, dict(np.load(os.path.join(path, "opt_state.npz")))
+        )
+    return params, opt_state, meta
 
 
 def load_checkpoint(
@@ -105,22 +300,46 @@ def load_checkpoint(
     opt_template=None,
     *,
     step: int | None = None,
+    verify: bool = True,
 ):
     """→ (step, params, opt_state, meta).  Templates supply structure/dtypes
     (e.g. from jax.eval_shape) — tensors come back as host numpy, ready for
-    device_put under any mesh."""
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    params = _unflatten_into(
-        params_template, dict(np.load(os.path.join(path, "params.npz")))
-    )
-    opt_state = None
-    if opt_template is not None and os.path.exists(os.path.join(path, "opt_state.npz")):
-        opt_state = _unflatten_into(
-            opt_template, dict(np.load(os.path.join(path, "opt_state.npz")))
+    device_put under any mesh.
+
+    With ``step=None`` (resume), checkpoints are tried newest → oldest and
+    the newest *verified* one wins; the skipped-corrupt count is reported as
+    ``meta["_fallback_skipped"]`` and the loaded directory name as
+    ``meta["_name"]``.  With an explicit ``step``, only that step is tried
+    (untagged preferred over tagged) and a corrupt checkpoint raises
+    :class:`CheckpointCorrupt`.  ``verify=False`` restores the legacy
+    trust-the-bytes behaviour (and is the only way to load a pre-manifest
+    checkpoint).
+    """
+    names = list_checkpoint_names(ckpt_dir)
+    if step is not None:
+        names = [n for n in names if step_of(n) == step]
+    if not names:
+        raise FileNotFoundError(
+            f"no checkpoints in {ckpt_dir}"
+            + (f" at step {step}" if step is not None else "")
         )
-    return step, params, opt_state, meta
+    skipped = 0
+    last_problems: list[str] = []
+    for name in reversed(names):
+        path = os.path.join(ckpt_dir, name)
+        if verify:
+            problems = verify_checkpoint(path)
+            if problems:
+                if step is not None:
+                    raise CheckpointCorrupt(f"{path}: {problems}")
+                skipped += 1
+                last_problems = problems
+                continue
+        params, opt_state, meta = _load_dir(path, params_template, opt_template)
+        meta["_fallback_skipped"] = skipped
+        meta["_name"] = name
+        return int(meta["step"]), params, opt_state, meta
+    raise CheckpointCorrupt(
+        f"no verified checkpoint in {ckpt_dir}: skipped {skipped}, "
+        f"last problems {last_problems}"
+    )

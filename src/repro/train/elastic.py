@@ -6,11 +6,37 @@ At 1000+ nodes the failure model is: a pod/host drops → the job controller
 (1) drains, (2) emergency-checkpoints from surviving hosts, (3) replans the
 mesh for the surviving device count, (4) restarts from the latest step with
 a deterministic re-assignment of data shards.  These helpers implement the
-deterministic pieces of that loop.
+deterministic pieces of that loop; ``train.supervisor.TrainSupervisor``
+drives them against a live Trainer (DESIGN.md §Training robustness).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+
+# -- frozen observability schema --------------------------------------------
+# The training analog of serve.lifecycle.COUNTER_KEYS: Trainer and
+# TrainSupervisor both snapshot against THIS key set (zero-filled), and
+# tests/test_train_chaos.py freezes it with a regression test.  Adding a
+# counter means adding it here, on purpose.
+
+#: Robustness counters common to Trainer and TrainSupervisor.
+COUNTER_KEYS = (
+    "nan_skips",  # in-step NaN guard suppressed an update
+    "rollbacks",  # anomaly guard restored params+opt from a checkpoint
+    "anomaly_halts",  # rollback retries exhausted → AnomalyHalt
+    "torn_ckpt_fallbacks",  # resume/rollback skipped corrupt checkpoints
+    "data_corrupt_batches",  # injected data_shard_corrupt batches seen
+    "emergency_saves",  # best-effort checkpoint on an escaping exception
+    "emergency_save_failures",  # ... and the save itself failed (logged)
+    "remesh_events",  # mesh replanned to a new survivor count
+    "worker_deaths",  # workers declared dead by the FailureDetector
+    "straggler_flags",  # StragglerPolicy flag events (per worker per tick)
+)
+
+
+def counters_view(counters) -> dict:
+    """Freeze a Counter/dict into the canonical zero-filled schema."""
+    return {k: int(counters.get(k, 0)) for k in COUNTER_KEYS}
 
 
 def reassign_shards(num_shards: int, alive_workers: list[int]) -> dict[int, list[int]]:
@@ -63,6 +89,37 @@ class StragglerPolicy:
         times = sorted(step_times.values())
         median = times[len(times) // 2]
         return [w for w, t in step_times.items() if t > self.threshold * median]
+
+
+@dataclass
+class StragglerTracker:
+    """Stateful wrapper over :class:`StragglerPolicy`: tracks *consecutive*
+    flags per worker and reports the ones that crossed ``patience`` —
+    the point where the supervisor excludes the worker and triggers the
+    elastic replan path.  A single slow step clears on the next fast one;
+    only a persistent straggler escalates."""
+
+    policy: StragglerPolicy = field(default_factory=StragglerPolicy)
+    _consecutive: dict[int, int] = field(default_factory=dict, repr=False)
+
+    def observe(self, step_times: dict[int, float]) -> tuple[list[int], list[int]]:
+        """Feed one round of per-worker step times → ``(flagged, to_exclude)``:
+        workers flagged this round, and those whose consecutive-flag streak
+        just reached ``policy.patience``."""
+        flagged = set(self.policy.flag(step_times))
+        to_exclude = []
+        for w in step_times:
+            if w in flagged:
+                self._consecutive[w] = self._consecutive.get(w, 0) + 1
+                if self._consecutive[w] == self.policy.patience:
+                    to_exclude.append(w)
+            else:
+                self._consecutive[w] = 0
+        return sorted(flagged), sorted(to_exclude)
+
+    def forget(self, worker: int) -> None:
+        """Drop tracking for an excluded/dead worker."""
+        self._consecutive.pop(worker, None)
 
 
 class FailureDetector:

@@ -1,0 +1,673 @@
+"""Train-side chaos suite: verified checkpoints, anomaly rollback, and the
+elastic supervisor, driven fault-by-fault through the shared injector
+(repro.faults TRAIN_POINTS).
+
+Fast half: the shared fault catalog + serve shim, the frozen counter schema,
+checkpoint integrity/fallback/GC on tiny numpy pytrees, AnomalyDetector and
+StragglerTracker units, and the TrainSupervisor over a lightweight fake
+trainer.  Slow half (@pytest.mark.slow): every recovery path end-to-end on a
+real reduced-config Trainer — spike rollback, persistent-spike halt, torn
+checkpoint resume, NaN skip/halt, emergency saves, resume equivalence, and
+supervisor worker-loss recovery matching an uninterrupted run bit-for-bit.
+"""
+import os
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.faults import (
+    NULL_INJECTOR,
+    POINTS,
+    SERVE_POINTS,
+    TRAIN_POINTS,
+    FaultInjector,
+    FaultSpec,
+)
+from repro.train import checkpoint as ckpt
+from repro.train.anomaly import AnomalyConfig, AnomalyDetector, AnomalyHalt
+from repro.train.elastic import (
+    COUNTER_KEYS,
+    StragglerPolicy,
+    StragglerTracker,
+    counters_view,
+)
+from repro.train.supervisor import NoSurvivorsError, TrainSupervisor
+
+
+# ---------------------------------------------------------------------------
+# shared fault machinery: catalog, shim, counted triggers
+# ---------------------------------------------------------------------------
+
+def test_fault_catalog_is_split_per_domain():
+    assert set(TRAIN_POINTS) == {
+        "ckpt_torn_write", "nan_grad", "loss_spike",
+        "worker_loss", "slow_worker", "data_shard_corrupt",
+    }
+    assert POINTS == SERVE_POINTS + TRAIN_POINTS
+    assert not set(SERVE_POINTS) & set(TRAIN_POINTS)
+
+
+def test_serve_faults_is_a_shim_over_shared_module():
+    """serve.faults re-exports the SAME objects — specs built through either
+    import path are interchangeable."""
+    from repro.serve import faults as serve_faults
+
+    assert serve_faults.FaultInjector is FaultInjector
+    assert serve_faults.FaultSpec is FaultSpec
+    assert serve_faults.NULL_INJECTOR is NULL_INJECTOR
+    assert serve_faults.POINTS is POINTS
+
+
+def test_unknown_fault_point_rejected():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultSpec("disk_on_fire")
+
+
+def test_counted_trigger_window_and_uid():
+    inj = FaultInjector([FaultSpec("nan_grad", after=2, times=2)])
+    fired = [inj.fires("nan_grad") is not None for _ in range(6)]
+    assert fired == [False, False, True, True, False, False]
+
+    # uid-restricted specs only count consults for their uid
+    inj = FaultInjector([FaultSpec("worker_loss", uid=3, after=1)])
+    assert inj.fires("worker_loss", uid=0) is None
+    assert inj.fires("worker_loss", uid=3) is None  # hit 0 < after
+    assert inj.fires("worker_loss", uid=0) is None  # doesn't consume uid=3
+    assert inj.fires("worker_loss", uid=3) is not None
+
+    # exhausted specs stay exhausted across rollback replays
+    assert inj.fires("worker_loss", uid=3) is None
+
+
+# ---------------------------------------------------------------------------
+# frozen counter schema
+# ---------------------------------------------------------------------------
+
+def test_counter_schema_frozen():
+    """Regression-freeze the robustness counter schema (the training analog
+    of serve.lifecycle.COUNTER_KEYS) — extending it is a deliberate act."""
+    assert COUNTER_KEYS == (
+        "nan_skips",
+        "rollbacks",
+        "anomaly_halts",
+        "torn_ckpt_fallbacks",
+        "data_corrupt_batches",
+        "emergency_saves",
+        "emergency_save_failures",
+        "remesh_events",
+        "worker_deaths",
+        "straggler_flags",
+    )
+
+
+def test_counters_view_zero_fills_and_drops_unknown():
+    view = counters_view(Counter({"rollbacks": 2, "not_a_counter": 9}))
+    assert set(view) == set(COUNTER_KEYS)
+    assert view["rollbacks"] == 2
+    assert view["nan_skips"] == 0
+    assert "not_a_counter" not in view
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: manifest, fallback, GC, tags
+# ---------------------------------------------------------------------------
+
+def _tiny_params(shift=0.0):
+    return {
+        "w": np.arange(6, dtype=np.float32).reshape(2, 3) + shift,
+        "b": np.full((3,), shift, np.float32),
+    }
+
+
+def _torn(uid=None, times=1):
+    return FaultInjector([FaultSpec("ckpt_torn_write", uid=uid, times=times)])
+
+
+def test_manifest_written_and_verifies(tmp_path):
+    path = ckpt.save_checkpoint(str(tmp_path), 7, _tiny_params())
+    assert os.path.exists(os.path.join(path, ckpt.MANIFEST_NAME))
+    assert ckpt.verify_checkpoint(path) == []
+    assert ckpt.latest_verified_name(str(tmp_path)) == "step_00000007"
+
+
+def test_verify_catches_bit_flip(tmp_path):
+    path = ckpt.save_checkpoint(str(tmp_path), 1, _tiny_params())
+    ppath = os.path.join(path, "params.npz")
+    with open(ppath, "r+b") as f:
+        f.seek(os.path.getsize(ppath) - 20)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    problems = ckpt.verify_checkpoint(path)
+    assert problems  # checksum mismatch or torn archive, depending on offset
+    assert not ckpt.is_verified(path)
+
+
+def test_injected_torn_write_fails_verification(tmp_path):
+    path = ckpt.save_checkpoint(str(tmp_path), 3, _tiny_params(),
+                                faults=_torn())
+    assert not ckpt.is_verified(path)
+    # the directory still LOOKS complete — that's the point
+    assert os.path.exists(os.path.join(path, "meta.json"))
+
+
+def test_resume_falls_back_over_torn_latest(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tiny_params(1.0), keep=10)
+    ckpt.save_checkpoint(d, 2, _tiny_params(2.0), keep=10)
+    ckpt.save_checkpoint(d, 3, _tiny_params(3.0), keep=10, faults=_torn(uid=3))
+    step, params, _, meta = ckpt.load_checkpoint(d, _tiny_params())
+    assert step == 2
+    assert meta["_fallback_skipped"] == 1
+    assert meta["_name"] == "step_00000002"
+    np.testing.assert_array_equal(params["b"], np.full((3,), 2.0, np.float32))
+
+
+def test_explicit_corrupt_step_raises(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tiny_params(), keep=10)
+    ckpt.save_checkpoint(d, 2, _tiny_params(), keep=10, faults=_torn(uid=2))
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.load_checkpoint(d, _tiny_params(), step=2)
+
+
+def test_all_corrupt_raises(tmp_path):
+    d = str(tmp_path)
+    inj = _torn(times=-1)
+    for s in (1, 2, 3):
+        ckpt.save_checkpoint(d, s, _tiny_params(), keep=10, faults=inj)
+    with pytest.raises(ckpt.CheckpointCorrupt, match="no verified checkpoint"):
+        ckpt.load_checkpoint(d, _tiny_params())
+
+
+def test_gc_never_deletes_last_verified(tmp_path):
+    """keep=2 would normally drop step 10, but it is the only checkpoint
+    that verifies — GC must protect it."""
+    d = str(tmp_path)
+    inj = FaultInjector([FaultSpec("ckpt_torn_write", after=1, times=-1)])
+    ckpt.save_checkpoint(d, 10, _tiny_params(), keep=2, faults=inj)
+    for s in (20, 30, 40):
+        ckpt.save_checkpoint(d, s, _tiny_params(), keep=2, faults=inj)
+    assert ckpt.list_checkpoints(d) == [10, 30, 40]
+    assert ckpt.latest_verified_name(d) == "step_00000010"
+    step, _, _, meta = ckpt.load_checkpoint(d, _tiny_params())
+    assert step == 10 and meta["_fallback_skipped"] == 2
+
+
+def test_tagged_save_never_clobbers_and_untagged_preferred(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 5, _tiny_params(), data_state={"step": 1},
+                         keep=10)
+    ckpt.save_checkpoint(d, 5, _tiny_params(), data_state={"step": 2},
+                         keep=10, tag="emergency")
+    names = ckpt.list_checkpoint_names(d)
+    assert names == ["step_00000005-emergency", "step_00000005"]
+    step, _, _, meta = ckpt.load_checkpoint(d, _tiny_params())
+    assert step == 5
+    assert meta["_name"] == "step_00000005"  # untagged wins at equal step
+    assert meta["data_state"] == {"step": 1}
+    with pytest.raises(ValueError, match="filename-safe"):
+        ckpt.checkpoint_name(5, tag="not/safe")
+
+
+def test_verify_false_loads_pre_manifest_checkpoint(tmp_path):
+    d = str(tmp_path)
+    path = ckpt.save_checkpoint(d, 4, _tiny_params(4.0))
+    os.remove(os.path.join(path, ckpt.MANIFEST_NAME))  # legacy layout
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.load_checkpoint(d, _tiny_params())
+    step, params, _, _ = ckpt.load_checkpoint(d, _tiny_params(), verify=False)
+    assert step == 4
+    np.testing.assert_array_equal(params["b"], np.full((3,), 4.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# anomaly detector units
+# ---------------------------------------------------------------------------
+
+_CFG = AnomalyConfig(warmup=5, z_threshold=4.0, min_rel_increase=0.25)
+
+
+def _feed_stable(det, n=12, base=1.0):
+    jitter = [0.0, 0.01, -0.01, 0.02, -0.02]
+    for i in range(n):
+        assert det.update(base + jitter[i % 5], base + jitter[(i + 2) % 5]) is None
+
+
+def test_spike_flags_after_warmup():
+    det = AnomalyDetector(_CFG)
+    _feed_stable(det)
+    report = det.update(10.0, 1.0)
+    assert report is not None and "loss_z" in report
+    assert report["loss_z"] > _CFG.z_threshold
+
+
+def test_warmup_suppresses_early_spikes():
+    det = AnomalyDetector(AnomalyConfig(warmup=10, z_threshold=4.0))
+    for _ in range(3):
+        assert det.update(1.0, 1.0) is None
+    assert det.update(50.0, 1.0) is None  # still inside warmup
+
+
+def test_detector_is_one_sided():
+    det = AnomalyDetector(_CFG)
+    _feed_stable(det)
+    assert det.update(0.01, 1.0) is None  # a loss cliff downward never flags
+
+
+def test_spike_not_absorbed_into_stats():
+    det = AnomalyDetector(_CFG)
+    _feed_stable(det)
+    assert det.update(10.0, 1.0) is not None
+    # the spike did not drag the baseline up: it flags again immediately,
+    # and a normal sample right after is clean
+    assert det.update(10.0, 1.0) is not None
+    assert det.update(1.0, 1.0) is None
+
+
+def test_flat_plateau_needs_relative_increase():
+    """Zero variance makes every z infinite — min_rel_increase is the
+    backstop that keeps femto-jitter from flagging."""
+    det = AnomalyDetector(_CFG)
+    for _ in range(10):
+        assert det.update(1.0, 1.0) is None
+    assert det.update(1.1, 1.0) is None  # +10% < min_rel_increase
+    assert det.update(1.5, 1.0) is not None  # +50%, z=inf
+
+
+def test_grad_norm_spikes_flag_independently():
+    det = AnomalyDetector(_CFG)
+    _feed_stable(det)
+    report = det.update(1.0, 25.0)
+    assert report is not None and list(report) == ["grad_norm_z"]
+
+
+def test_disabled_detector_never_flags():
+    det = AnomalyDetector(AnomalyConfig(enabled=False, warmup=0))
+    for _ in range(5):
+        assert det.update(1e9, 1e9) is None
+
+
+# ---------------------------------------------------------------------------
+# straggler tracker units
+# ---------------------------------------------------------------------------
+
+def test_straggler_escalates_at_patience():
+    tr = StragglerTracker(StragglerPolicy(threshold=2.0, patience=3))
+    times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0}
+    assert tr.observe(times) == ([3], [])
+    assert tr.observe(times) == ([3], [])
+    assert tr.observe(times) == ([3], [3])  # streak reaches patience
+    assert tr.observe(times) == ([3], [])  # escalates exactly once
+
+
+def test_straggler_streak_clears_on_fast_step():
+    tr = StragglerTracker(StragglerPolicy(threshold=2.0, patience=2))
+    slow = {0: 1.0, 1: 1.0, 2: 8.0}
+    fast = {0: 1.0, 1: 1.0, 2: 1.0}
+    assert tr.observe(slow) == ([2], [])
+    assert tr.observe(fast) == ([], [])  # one slow step is forgiven
+    assert tr.observe(slow) == ([2], [])
+    assert tr.observe(slow) == ([2], [2])
+
+
+def test_straggler_forget_resets_state():
+    tr = StragglerTracker(StragglerPolicy(threshold=2.0, patience=2))
+    tr.observe({0: 1.0, 1: 9.0, 2: 1.0})
+    tr.forget(1)
+    assert tr.observe({0: 1.0, 1: 9.0, 2: 1.0}) == ([1], [])  # streak restarted
+
+
+# ---------------------------------------------------------------------------
+# supervisor over a fake trainer
+# ---------------------------------------------------------------------------
+
+class FakeTrainer:
+    """The Trainer surface the supervisor needs, with instant steps and an
+    in-memory 'checkpoint' at every ckpt_every-th step."""
+
+    def __init__(self, ckpt_every=5):
+        self.step = 0
+        self.counters = Counter()
+        self.history = []
+        self.ckpt_every = ckpt_every
+        self._ckpt_step = 0
+        self.restores = []
+
+    def step_once(self):
+        self.step += 1
+        rec = {"step": self.step, "loss": 1.0}
+        self.history.append(rec)
+        if self.step % self.ckpt_every == 0:
+            self._ckpt_step = self.step
+        return rec
+
+    def restore_from_checkpoint(self, *, restore_data=True):
+        self.restores.append(self.step)
+        self.step = self._ckpt_step
+        self.history = [r for r in self.history if r["step"] <= self.step]
+        return self.step
+
+
+def test_supervisor_healthy_run_is_quiet():
+    sup = TrainSupervisor(FakeTrainer(), num_workers=4)
+    hist = sup.run(10)
+    assert len(hist) == 10 and sup.ticks == 10
+    assert sup.events == [] and sup.alive == [0, 1, 2, 3]
+    assert all(v == 0 for v in sup.counters_snapshot().values())
+    assert sup.mesh_plan == ((4, 1), ("data", "model"))
+
+
+def test_supervisor_worker_loss_remesh_and_restore():
+    ft = FakeTrainer(ckpt_every=5)
+    inj = FaultInjector([FaultSpec("worker_loss", uid=2, after=6, times=-1)])
+    sup = TrainSupervisor(ft, num_workers=4, max_missed=2, faults=inj)
+    sup.run(12)
+    snap = sup.counters_snapshot()
+    assert snap["worker_deaths"] == 1 and snap["remesh_events"] == 1
+    # worker 2 stops beating on tick 7 and crosses max_missed=2 that same
+    # tick (a beat-then-count detector carries one standing miss), so the
+    # remesh+restore lands with the trainer at step 6 → back to the step-5
+    # snapshot
+    assert ft.restores == [6]
+    assert sup.alive == [0, 1, 3]
+    assert sup.mesh_plan == ((3, 1), ("data", "model"))
+    # every shard reassigned exactly once across the survivors
+    shards = sorted(s for v in sup.shard_assignment.values() for s in v)
+    assert shards == list(range(sup.num_shards))
+    assert set(sup.shard_assignment) == {0, 1, 3}
+    kinds = [e["kind"] for e in sup.events]
+    assert kinds == ["worker_loss", "remesh"]
+    # trainer resumed from the step-5 snapshot and still reached the target
+    assert ft.step == 12 and [r["step"] for r in ft.history] == list(range(1, 13))
+
+
+def test_supervisor_straggler_excluded_via_death_path():
+    ft = FakeTrainer(ckpt_every=4)
+    inj = FaultInjector([FaultSpec("slow_worker", uid=1, times=-1, delay=9.0)])
+    sup = TrainSupervisor(
+        ft, num_workers=4, max_missed=2, faults=inj,
+        straggler_policy=StragglerPolicy(threshold=2.0, patience=2),
+    )
+    sup.run(12)
+    snap = sup.counters_snapshot()
+    assert snap["straggler_flags"] >= 2
+    assert snap["worker_deaths"] == 1 and snap["remesh_events"] == 1
+    assert sup.alive == [0, 2, 3]
+    kinds = [e["kind"] for e in sup.events]
+    assert kinds == ["straggler_excluded", "remesh"]
+
+
+def test_supervisor_no_survivors_raises():
+    inj = FaultInjector([FaultSpec("worker_loss", times=-1)])  # uid=None: all
+    sup = TrainSupervisor(FakeTrainer(), num_workers=3, max_missed=1,
+                          faults=inj)
+    with pytest.raises(NoSurvivorsError):
+        sup.run(5)
+
+
+def test_supervisor_tick_budget_bounds_pathology():
+    class StuckTrainer(FakeTrainer):
+        def step_once(self):
+            return None  # e.g. every step consumed by rollbacks
+
+    sup = TrainSupervisor(StuckTrainer(), num_workers=2)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        sup.run(5, max_ticks=7)
+    assert sup.ticks == 7
+
+
+def test_supervisor_snapshot_merges_trainer_counters():
+    ft = FakeTrainer()
+    ft.counters["nan_skips"] = 2
+    sup = TrainSupervisor(ft, num_workers=2)
+    sup.counters["remesh_events"] = 1
+    snap = sup.counters_snapshot()
+    assert tuple(snap) == COUNTER_KEYS
+    assert snap["nan_skips"] == 2 and snap["remesh_events"] == 1
+
+
+def test_supervisor_rejects_empty_worker_set():
+    with pytest.raises(ValueError):
+        TrainSupervisor(FakeTrainer(), num_workers=0)
+
+
+# ---------------------------------------------------------------------------
+# slow: every recovery path end-to-end on a real reduced-config Trainer
+# ---------------------------------------------------------------------------
+
+def _make_trainer(workdir, *, batch=2, seq=16, lr=1e-3, total=40, seed=0,
+                  **kw):
+    from repro.configs import get_config
+    from repro.train.data import SyntheticLMData
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.trainer import Trainer
+
+    cfg = get_config("minicpm-2b", reduced=True)
+    opt = OptimizerConfig(peak_lr=lr, warmup_steps=2, total_steps=total)
+    data = SyntheticLMData(cfg.vocab, batch, seq, seed=seed)
+    return Trainer(cfg, opt, data, workdir=workdir, log_every=1000, **kw)
+
+
+_LOOSE = AnomalyConfig(warmup=3, z_threshold=6.0)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_loss_spike_rolls_back_and_continues(tmp_path):
+    inj = FaultInjector([FaultSpec("loss_spike", after=8)])
+    tr = _make_trainer(str(tmp_path), ckpt_every=5, anomaly=_LOOSE,
+                       faults=inj)
+    hist = tr.run(15)
+    snap = tr.counters_snapshot()
+    assert snap["rollbacks"] == 1 and snap["anomaly_halts"] == 0
+    # rolled back to the step-5 checkpoint, then re-trained through the
+    # window on the advanced data stream — one coherent trajectory
+    assert [r["step"] for r in hist] == list(range(1, 16))
+    assert all(np.isfinite(r["loss"]) for r in hist)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_persistent_spike_exhausts_rollbacks_and_halts(tmp_path):
+    inj = FaultInjector([FaultSpec("loss_spike", after=6, times=-1)])
+    cfg = AnomalyConfig(warmup=3, z_threshold=6.0, max_rollbacks=2)
+    tr = _make_trainer(str(tmp_path), ckpt_every=5, anomaly=cfg, faults=inj)
+    with pytest.raises(AnomalyHalt):
+        tr.run(15)
+    snap = tr.counters_snapshot()
+    assert snap["rollbacks"] == 2 and snap["anomaly_halts"] == 1
+    # the halt left a tagged forensic checkpoint, never clobbering the
+    # periodic one at the same step
+    names = ckpt.list_checkpoint_names(os.path.join(str(tmp_path),
+                                                    "checkpoints"))
+    assert any(n.endswith("-anomaly-halt") for n in names)
+    assert snap["emergency_saves"] == 0  # AnomalyHalt skips the emergency path
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_torn_checkpoint_resume_falls_back(tmp_path):
+    inj = FaultInjector([FaultSpec("ckpt_torn_write", uid=8)])
+    tr = _make_trainer(str(tmp_path), ckpt_every=4, faults=inj)
+    while tr.step < 8:
+        tr.step_once()
+    # saves landed at 0 (baseline), 4 (good) and 8 (torn); abandon the run
+    ckpt_dir = os.path.join(str(tmp_path), "checkpoints")
+    assert ckpt.list_checkpoints(ckpt_dir) == [0, 4, 8]
+    assert not ckpt.is_verified(os.path.join(ckpt_dir, "step_00000008"))
+
+    tr2 = _make_trainer(str(tmp_path), ckpt_every=4)
+    assert tr2.step == 4  # resumed past the torn latest
+    assert tr2.counters_snapshot()["torn_ckpt_fallbacks"] == 1
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_nan_grad_skipped_and_counted(tmp_path):
+    inj = FaultInjector([FaultSpec("nan_grad", after=3)])
+    tr = _make_trainer(str(tmp_path), ckpt_every=100, anomaly=_LOOSE,
+                       faults=inj)
+    hist = tr.run(6)
+    snap = tr.counters_snapshot()
+    assert snap["nan_skips"] == 1 and snap["rollbacks"] == 0
+    assert len(hist) == 6
+    # the poisoned step recorded a non-finite loss but training continued,
+    # and the suppressed update left the next steps finite
+    assert not np.isfinite(hist[3]["loss"])
+    assert all(np.isfinite(hist[i]["loss"]) for i in (2, 4, 5))
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_nan_policy_halt_saves_tagged_checkpoint(tmp_path):
+    inj = FaultInjector([FaultSpec("nan_grad", after=2)])
+    tr = _make_trainer(str(tmp_path), ckpt_every=100, nan_policy="halt",
+                       faults=inj)
+    with pytest.raises(FloatingPointError):
+        tr.run(6)
+    names = ckpt.list_checkpoint_names(os.path.join(str(tmp_path),
+                                                    "checkpoints"))
+    assert "step_00000002-nan-halt" in names
+    assert tr.counters_snapshot()["nan_skips"] == 1
+
+
+class _CrashingData:
+    """Wraps a dataset; next_batch raises once the wrapped stream has
+    yielded ``crash_after`` batches — models a dying data reader."""
+
+    def __init__(self, inner, crash_after):
+        self.inner = inner
+        self.crash_after = crash_after
+        self._served = 0
+
+    def next_batch(self):
+        if self._served >= self.crash_after:
+            raise RuntimeError("data reader died")
+        self._served += 1
+        return self.inner.next_batch()
+
+    def state(self):
+        return self.inner.state()
+
+    def restore(self, state):
+        self.inner.restore(state)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_emergency_save_is_tagged_and_failures_are_logged(tmp_path, capsys,
+                                                          monkeypatch):
+    tr = _make_trainer(str(tmp_path), ckpt_every=3)
+    tr.dataset = _CrashingData(tr.dataset, crash_after=6)
+    with pytest.raises(RuntimeError, match="data reader died"):
+        tr.run(10)
+    snap = tr.counters_snapshot()
+    assert snap["emergency_saves"] == 1 and snap["emergency_save_failures"] == 0
+    names = ckpt.list_checkpoint_names(os.path.join(str(tmp_path),
+                                                    "checkpoints"))
+    # tag suffix: the emergency save at step 6 coexists with the periodic
+    # checkpoint written at the same step — never clobbered
+    assert "step_00000006" in names and "step_00000006-emergency" in names
+
+    # a failing emergency save is logged + counted, never swallowed
+    def _boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt, "save_checkpoint", _boom)
+    with pytest.raises(RuntimeError, match="data reader died"):
+        tr.run(10)
+    assert tr.counters_snapshot()["emergency_save_failures"] == 1
+    assert "EMERGENCY SAVE FAILED" in capsys.readouterr().out
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_resume_after_kill_matches_uninterrupted_run(tmp_path):
+    """Periodic-checkpoint kill: train 12 straight vs. kill at step 7 and
+    resume from the step-5 checkpoint — identical per-step loss history."""
+    straight = _make_trainer(str(tmp_path / "a"), ckpt_every=5)
+    for _ in range(12):
+        straight.step_once()
+
+    killed = _make_trainer(str(tmp_path / "b"), ckpt_every=5)
+    for _ in range(7):
+        killed.step_once()
+    assert [r["step"] for r in killed.history[:5]] == list(range(1, 6))
+
+    resumed = _make_trainer(str(tmp_path / "b"), ckpt_every=5)
+    assert resumed.step == 5
+    while resumed.step < 12:
+        resumed.step_once()
+    want = [(r["step"], r["loss"]) for r in straight.history[5:]]
+    got = [(r["step"], r["loss"]) for r in resumed.history]
+    assert got == want  # bit-identical, not approximately equal
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_resume_from_emergency_checkpoint_matches_uninterrupted(tmp_path):
+    """Emergency-checkpoint kill: no periodic save ever landed, the crash
+    path's -emergency save is the resume point."""
+    straight = _make_trainer(str(tmp_path / "a"), ckpt_every=100)
+    for _ in range(12):
+        straight.step_once()
+
+    crashed = _make_trainer(str(tmp_path / "b"), ckpt_every=100)
+    crashed.dataset = _CrashingData(crashed.dataset, crash_after=8)
+    with pytest.raises(RuntimeError):
+        crashed.run(12)
+    names = ckpt.list_checkpoint_names(os.path.join(str(tmp_path / "b"),
+                                                    "checkpoints"))
+    assert "step_00000008-emergency" in names
+
+    resumed = _make_trainer(str(tmp_path / "b"), ckpt_every=100)
+    assert resumed.step == 8
+    while resumed.step < 12:
+        resumed.step_once()
+    want = [(r["step"], r["loss"]) for r in straight.history[8:]]
+    got = [(r["step"], r["loss"]) for r in resumed.history]
+    assert got == want
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_supervisor_worker_loss_recovery_matches_uninterrupted(tmp_path):
+    """The full elastic loop: worker dies mid-run, supervisor remeshes and
+    restores from the verified checkpoint — and because checkpoints are
+    mesh-agnostic and the data stream deterministic, the recovered loss
+    history is IDENTICAL to an uninterrupted run."""
+    plain = _make_trainer(str(tmp_path / "a"), ckpt_every=5)
+    for _ in range(14):
+        plain.step_once()
+
+    tr = _make_trainer(str(tmp_path / "b"), ckpt_every=5)
+    inj = FaultInjector([FaultSpec("worker_loss", uid=2, after=7, times=-1)])
+    sup = TrainSupervisor(tr, num_workers=4, max_missed=2, faults=inj)
+    hist = sup.run(14)
+    snap = sup.counters_snapshot()
+    assert snap["worker_deaths"] == 1 and snap["remesh_events"] == 1
+    assert sup.alive == [0, 1, 3]
+    assert [(r["step"], r["loss"]) for r in hist] == \
+        [(r["step"], r["loss"]) for r in plain.history]
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(600)
+def test_data_shard_corrupt_caught_by_anomaly_guard(tmp_path):
+    """A corrupt shard's scrambled labels push the loss back toward
+    log(vocab); after warmup that excursion z-flags and the rollback
+    re-trains past the window on the advanced stream."""
+    inj = FaultInjector([FaultSpec("data_shard_corrupt", after=39)])
+    cfg = AnomalyConfig(warmup=10, z_threshold=3.0, min_rel_increase=0.06,
+                        max_rollbacks=3)
+    tr = _make_trainer(str(tmp_path), batch=4, seq=32, lr=3e-3, total=60,
+                       ckpt_every=10, anomaly=cfg, faults=inj)
+    hist = tr.run(45)
+    snap = tr.counters_snapshot()
+    assert snap["data_corrupt_batches"] == 1
+    assert snap["rollbacks"] == 1 and snap["anomaly_halts"] == 0
+    assert [r["step"] for r in hist] == list(range(1, 46))
+    # the run recovered: post-rollback training kept converging
+    assert hist[-1]["loss"] < 6.0
