@@ -79,6 +79,17 @@ BOUNDS = (
         metric="resume_loss_match", floor=0.999,
         note="resume must reproduce the uninterrupted loss trajectory exactly",
     ),
+    # BENCH_mesh.json reference (300-token prompt, prefill_chunk=32, 2-way
+    # context ring): chunked prefill reaches the first token after 4
+    # scheduler ticks, mesh whole-prompt admission emits it in the
+    # admission tick itself (TTFT 0, clamped to 1 in the ratio) — recorded
+    # ratio 4×.  A collapse back to chunked admission reads ~1×; the floor
+    # fails that, not tick-count noise.
+    Bound(
+        path="BENCH_mesh.json", kind="summary",
+        metric="chunked_over_mesh_ttft_ticks", floor=2.0,
+        note="whole-prompt ring admission must collapse TTFT vs chunked",
+    ),
 )
 
 

@@ -29,6 +29,10 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
                               torn, plus bit-exact resume-loss match
                               (BENCH_train_chaos.json; floors gated by
                               benchmarks/regress.py)
+  §Mesh    mesh_serving     — ring-prefill-into-paged-decode TTFT vs
+                              chunked single-device prefill on the same
+                              engine (BENCH_mesh.json; floor gated by
+                              benchmarks/regress.py)
 
 ``--smoke`` runs every benchmark at one tiny shape (interpret mode on this
 container) without touching the persisted JSON results — a CI-grade check
@@ -57,6 +61,7 @@ BENCHES = [
     "serving",
     "cluster",
     "train_chaos",
+    "mesh_serving",
 ]
 
 

@@ -348,15 +348,17 @@ _ring_flash_local.defvjp(_ring_flash_vjp_fwd, _ring_flash_vjp_bwd)
 # ---------------------------------------------------------------------------
 
 
-def _distr_stage1(meta: _RingMeta, q):
+def _distr_stage1(meta: _RingMeta, q, hkv: int):
     """The LSH stage (per-Q-block permutations + sampled Q̂), run as plain
     XLA *outside* the shard_map — the shared ``ops.distr_stage1``
     implementation, so the grouping decision cannot diverge from the
     single-device op.  Blocks never cross a shard boundary (shards are
     ``block_q``-aligned), so grouping is shard-local by construction and
     computing it on the global (GSPMD-sharded) array is bit-identical to a
-    per-shard computation."""
-    return ops.distr_stage1(meta.dcfg, q, meta.scale)
+    per-shard computation.  ``hkv`` enables the shared-KV-perm variant
+    (one permutation per KV group from the group's mean query block,
+    broadcast back to Hq) — still shard-local for the same reason."""
+    return ops.distr_stage1(meta.dcfg, q, meta.scale, hkv=hkv)
 
 
 def _ring_distr_local_fwd(meta: _RingMeta, q_hat, perms, k, v):
@@ -484,7 +486,7 @@ def _ring_distr(meta: _RingMeta, mesh, axis, q, k, v):
 
 
 def _ring_distr_fwd_global(meta, mesh, axis, q, k, v):
-    q_hat, perms = _distr_stage1(meta, q)
+    q_hat, perms = _distr_stage1(meta, q, k.shape[1])
     qkv_spec, out_spec = _ring_specs(
         mesh, axis, q.shape[0], q.shape[1], k.shape[1]
     )
@@ -671,11 +673,6 @@ def ring_distr_attention(
         raise ValueError(
             f"ring attention is self-attention only: N_q={q.shape[2]} != "
             f"N_k={k.shape[2]}"
-        )
-    if cfg.shared_kv_perm:
-        raise NotImplementedError(
-            "shared_kv_perm under the ring: derive per-KV-group perms from "
-            "the local q mean before stage 1 (not yet wired)"
         )
     scale = float(scale) if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
     if interpret is None:

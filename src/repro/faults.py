@@ -34,6 +34,15 @@ Serve points (DESIGN.md §Robustness, §Cluster tier):
                     ``distributed.ring_attention.dead_shard_fault`` — the
                     ring skips the shard's hops and serves a degraded but
                     finite result.
+  mesh_prefill      the whole-prompt ring prefill of a mesh-capable paged
+                    replica raises (models a collective timing out / a mesh
+                    device lost mid-prefill); fired inside
+                    ``PagedServeEngine.prefill_mesh_run`` BEFORE any pool
+                    write, so a failed ring prefill never poisons the block
+                    pool — the scheduler retries the culprit a bounded
+                    number of times then fails it, and the cluster tier's
+                    failover replay re-routes it to another capable replica.
+                    Raised as :class:`InjectedFault`.
   replica_crash     an entire engine replica's process dies (models OOM
                     kill / host loss in the multi-replica tier); consulted
                     by ``serve.cluster.ClusterRouter`` once per tick per
@@ -95,6 +104,7 @@ SERVE_POINTS = (
     "restore_failure",
     "slow_step",
     "dead_ring_shard",
+    "mesh_prefill",
     "replica_crash",
 )
 

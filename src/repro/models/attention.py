@@ -303,6 +303,14 @@ def attention_decode_paged(
     (kernels/paged_decode.py).  Fused-K̂ variant: pass ``pool_k_fused`` +
     the layer's static ``perm``; the raw K pool may be None (it is never
     read or written on the fused paged path).
+
+    Decode slides past the table's capacity: the write position wraps
+    (``pos mod capacity``), recycling the request's HEAD blocks in place —
+    the oldest token is overwritten and the kernel attends the live window
+    ``min(pos + w, capacity)`` — the paged analog of the slot engine's
+    ring-cache eviction.  RoPE stays at the *absolute* position, exactly
+    like the slot ring write, so the two windowed decodes agree.  Prompts
+    are admission-bounded below capacity, so chunked prefill never wraps.
     """
     from repro.serve import kv_cache as kvc
 
@@ -316,16 +324,20 @@ def attention_decode_paged(
         q = layers.apply_rope(q, positions, cfg.rope_theta)
         k = layers.apply_rope(k, positions, cfg.rope_theta)
 
-    pool_v = paged_insert(pool_v, v, block_tables, pos, count)
+    capacity = block_tables.shape[1] * pool_v.shape[2]
+    wpos = pos % capacity
+    pool_v = paged_insert(pool_v, v, block_tables, wpos, count)
     scale = 1.0 / (cfg.head_dim_**0.5)
     # Kernel lengths include the whole window (pos + w): live row t's band
     # col < pos + t + 1 then lands exactly on its own position; padded rows
-    # only ever widen *their own* (discarded) reads.
-    lengths = pos + w
+    # only ever widen *their own* (discarded) reads.  Past capacity every
+    # pool position is live (the ring overwrote the oldest), so the band
+    # clamps to the full table.
+    lengths = jnp.minimum(pos + w, capacity)
     if pool_k_fused is not None:
         g = cfg.attention.distr.group_size
         k_f_new = kvc.fuse_new_k(k, perm, g)
-        pool_k_fused = paged_insert(pool_k_fused, k_f_new, block_tables, pos,
+        pool_k_fused = paged_insert(pool_k_fused, k_f_new, block_tables, wpos,
                                     count)
         o = attend_decode(
             q, None, pool_v, cfg.attention, lengths=lengths,
@@ -334,7 +346,7 @@ def attention_decode_paged(
         )
         new_pools = (None, pool_v, pool_k_fused)
     else:
-        pool_k = paged_insert(pool_k, k, block_tables, pos, count)
+        pool_k = paged_insert(pool_k, k, block_tables, wpos, count)
         o = attend_decode(
             q, pool_k, pool_v, cfg.attention, lengths=lengths, scale=scale,
             block_tables=block_tables,

@@ -499,6 +499,69 @@ def paged_decode_attention_cost(
     }
 
 
+def mesh_prefill_handoff_cost(
+    hq: int,
+    hkv: int,
+    n: int,
+    p: int,
+    d: int,
+    *,
+    group_size: int = 1,
+    w: int = 2,
+) -> dict:
+    """FLOPs / bytes model of one mesh-prefill→paged-decode handoff (per
+    layer; serve_step.make_mesh_paged_prefill under PagedServeEngine(mesh=)).
+
+    Three phases, all modeled per device on a ``p``-way context ring:
+
+      * **Ring attention** over the ``n``-token prompt: each device holds a
+        ``ceil(n/p)``-row query shard and streams every KV shard over
+        ``p − 1`` collective-permute hops (causal sweeps skip future hops,
+        so the rotate volume is halved on average).  A causal query row
+        attends ``n/2`` keys on average — per-device MXU work is the
+        single-device prefill's divided by ``p``.
+      * **Gather**: the per-shard K/V re-assembles to global arrays at the
+        shard_map boundary (all-gather: each device contributes its shard
+        to ``p − 1`` peers).
+      * **Handoff scatter**: the pool-owning device writes the prompt's
+        K/V (fused K̂ at width ``d/group_size`` replaces raw K when the
+        engine decodes fused) through the block table — read the gathered
+        rows, write the pool blocks.
+
+    Seconds follow from the module constants: ``mxu_flops/PEAK_FLOPS``,
+    ``(ici_rotate_bytes + ici_gather_bytes)/ICI_BW``,
+    ``(hbm_stream_bytes + pool_scatter_bytes)/HBM_BW`` — the roofline rows
+    benchmarks/mesh_serving.py reports next to the measured TTFT.
+    """
+    shard = -(-n // max(p, 1))
+    d_score = d // group_size
+    rows = hq * shard
+    attended = n / 2.0  # causal average
+
+    qk_flops = 2.0 * rows * attended * d
+    pv_flops = 2.0 * rows * attended * d
+    softmax_flops = 4.0 * rows * attended
+
+    # Per hop one KV shard (K + V) rides collective-permute; causal rings
+    # run half the hops on average.
+    ici_rotate_bytes = (p - 1) / 2.0 * w * hkv * shard * 2 * d
+    ici_gather_bytes = (p - 1) * w * hkv * shard * 2 * d
+    hbm_stream_bytes = w * shard * (2 * hq * d + 2 * hkv * d)  # q,o + k,v
+    # Scatter on the pool device: read the n gathered rows, write K̂/K + V.
+    pool_scatter_bytes = 2 * w * hkv * n * (d_score + d)
+
+    return {
+        "shard_len": shard,
+        "mxu_flops": qk_flops + pv_flops,
+        "total_flops": qk_flops + pv_flops + softmax_flops,
+        "ici_rotate_bytes": ici_rotate_bytes,
+        "ici_gather_bytes": ici_gather_bytes,
+        "hbm_stream_bytes": hbm_stream_bytes,
+        "pool_scatter_bytes": pool_scatter_bytes,
+        "hbm_bytes": hbm_stream_bytes + pool_scatter_bytes,
+    }
+
+
 # ---------------------------------------------------------------------------
 # MODEL_FLOPS (6·N·D convention)
 # ---------------------------------------------------------------------------

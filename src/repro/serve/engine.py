@@ -479,6 +479,12 @@ class ServeEngine:
         so the cluster router's health model can diff snapshots blindly."""
         return lifecycle.counters_view(self.counters)
 
+    @property
+    def max_prompt_len(self) -> int:
+        """Longest prompt ``add_request`` accepts — the replica *capability*
+        the cluster router steers on (serve.cluster.EngineReplica)."""
+        return self.max_len
+
     def metrics(self) -> list[dict]:
         """Per-request TTFT / TPOT (same shape as PagedServeEngine.metrics,
         so benchmarks/serving.py compares the engines on equal terms).
@@ -512,13 +518,29 @@ class PagedServeEngine:
 
     Scope: GQA dense/moe families (the pools mirror the ring k/v cache
     layout; fused-K̂ pools under ``attention.distr_decode``).  A request's
-    total length is bounded by ``max_len`` (the block-table width) — the
-    sliding-window ring trick is a contiguous-cache feature.
+    *prompt* is bounded by ``max_len`` (the block-table width); decode
+    slides past it — once the table is full the write position wraps
+    (``pos mod capacity``) and new tokens recycle the request's head
+    blocks in place, the paged analog of the slot engine's ring-cache
+    eviction, so ``max_new_tokens`` is never capacity-bound.
+
+    ``mesh``: optional device mesh.  When it carries the axis named by
+    ``cfg.attention.context_axis``, whole-prompt prefill of long prompts
+    runs ring sequence-parallel attention across the mesh and scatters the
+    resulting per-layer K/V into this engine's (single-device) block pool
+    in ONE scheduler tick (``prefill_mesh_run``) — prefill compute scales
+    with ring size, decode-side KV residency stays paged and local.
 
     Construction resolves the pool block size through the autotuner
     (``repro.tune`` kernel key ``paged_decode``) — under
     ``REPRO_TUNE=measure`` the sweep runs once here, never in a tick.
+    With a mesh it also pre-resolves the ring-prefill attention buckets
+    (keyed per ring shard) so no serving tick blocks on a timing run.
     """
+
+    #: Decode slides past capacity by recycling head blocks (the scheduler
+    #: consults this before force-finishing a request at the table bound).
+    window_decode = True
 
     def __init__(self, cfg, params, *, max_batch: int = 8, max_len: int = 512,
                  block_size: int | None = None, num_blocks: int | None = None,
@@ -526,7 +548,7 @@ class PagedServeEngine:
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
                  seed: int = 0, cache_dtype=jnp.bfloat16, clock=None,
                  max_waiting=None, degrade: DegradeConfig | None = None,
-                 faults=None):
+                 faults=None, mesh=None):
         from repro.serve import paged
         from repro.serve.scheduler import Scheduler, SchedulerConfig
         from repro.serve.serve_step import make_paged_step
@@ -549,18 +571,27 @@ class PagedServeEngine:
         self.temperature = temperature
         self.top_k = top_k
         self.top_p = top_p
+        self.mesh = mesh
         self._uid = itertools.count()
         self._rng = jax.random.PRNGKey(seed)
 
         # Pool block size doubles as allocator granularity: resolve it
         # (tuned under REPRO_TUNE) before the pools are shaped by it.  An
-        # explicit block_size skips the warm-up — a measure-mode sweep
-        # whose result would be discarded is pure construction-time waste.
-        if block_size is None:
-            self.tuned_blocks = warm_paged_engine(cfg, max_len)
-            block_size = self.tuned_blocks.get("paged_decode", 128)
+        # explicit block_size skips the decode warm-up — a measure-mode
+        # sweep whose result would be discarded is pure construction-time
+        # waste.  A mesh engine additionally warms the ring-prefill
+        # attention buckets under the mesh (per-shard tuner keys).
+        want_decode = block_size is None
+        if want_decode or mesh is not None:
+            with maybe_set_mesh(mesh):
+                self.tuned_blocks = warm_paged_engine(
+                    cfg, max_len, decode=want_decode,
+                    mesh_prefill_buckets=mesh is not None,
+                )
         else:
             self.tuned_blocks = {}
+        if block_size is None:
+            block_size = self.tuned_blocks.get("paged_decode", 128)
         self.block_size = min(block_size, max_len)
         self.max_blocks = -(-max_len // self.block_size)
         self.capacity_tokens = self.max_blocks * self.block_size
@@ -590,6 +621,7 @@ class PagedServeEngine:
         self._decode = jax.jit(make_paged_step(cfg, 1))
         self._chunk = jax.jit(make_paged_step(cfg, self.prefill_chunk))
         self._degraded: dict[tuple[int, int], object] = {}
+        self._mesh_prefills: dict = {}
         self.finished: list[Request] = []
 
     # -- public API (mirrors ServeEngine) --------------------------------
@@ -599,7 +631,9 @@ class PagedServeEngine:
                     deadline_e2e=None) -> int:
         # The first decode token writes at position len(prompt): a request
         # must leave at least one block-table slot for it (a clamped write
-        # at capacity would land inside the LAST live block).
+        # at capacity would land inside the LAST live block).  Only the
+        # PROMPT is capacity-bound: max_new_tokens may cross capacity
+        # freely — decode slides by recycling head blocks (window_decode).
         _validate_request(
             prompt, min(self.max_len, self.capacity_tokens - 1),
             max_new_tokens, what="max_len (capacity − 1)",
@@ -660,6 +694,14 @@ class PagedServeEngine:
         """Current degradation-controller level (0 = exact / no controller)."""
         d = self.scheduler.degrade
         return 0 if d is None else d.level
+
+    @property
+    def max_prompt_len(self) -> int:
+        """Longest prompt ``add_request`` accepts — the replica *capability*
+        the cluster router steers on (serve.cluster.EngineReplica).  A
+        mesh-backed engine is built with a large ``max_len`` (ring prefill
+        makes it affordable); this property is how it advertises that."""
+        return min(self.max_len, self.capacity_tokens - 1)
 
     # -- scheduler primitives --------------------------------------------
 
@@ -765,6 +807,51 @@ class PagedServeEngine:
             self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32),
             self.cache.pools, bt,
         )
+        if self.faults.fires("nan_logits", entry.uid) is not None:
+            row = jnp.full_like(row, jnp.nan)
+        return row
+
+    def mesh_prefill_ready(self, n: int) -> bool:
+        """Scheduler consult: admit an ``n``-token prompt as ONE whole-
+        prompt ring-prefill tick instead of chunked prefill?  Requires a
+        mesh, and a prompt longer than one chunk — a one-chunk prompt
+        already admits in a single tick, with no collective to amortise."""
+        return self.mesh is not None and n > self.prefill_chunk
+
+    def _mesh_prefill_fn(self, bucket: int, dead=frozenset()):
+        from repro.serve.serve_step import make_mesh_paged_prefill
+
+        # Keyed by the dead-shard set too: dead_shard_fault rewires the
+        # ring at TRACE time, so a degraded ring needs its own jit entry.
+        key = (bucket, tuple(sorted(dead)))
+        if key not in self._mesh_prefills:
+            self._mesh_prefills[key] = jax.jit(
+                make_mesh_paged_prefill(self.cfg, bucket)
+            )
+        return self._mesh_prefills[key]
+
+    def prefill_mesh_run(self, entry) -> jnp.ndarray:
+        """Whole-prompt *exact* prefill across the context-parallel ring
+        (serve_step.make_mesh_paged_prefill): one forward under the
+        engine's mesh replaces every chunk, scattering the prompt's
+        per-layer K/V into the already-allocated blocks of THIS device's
+        pool; returns the last live row's logits.  Faults fire before any
+        pool mutation, so a failed collective never poisons the blocks."""
+        self.faults.raise_if("stuck_step", entry.uid)
+        self.faults.raise_if("mesh_prefill", entry.uid)
+        from repro.distributed.ring_attention import dead_shard_fault
+
+        n = len(entry.req.prompt)
+        bucket = min(_bucket(n), self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = entry.req.prompt
+        bt = self.cache.table_array([entry.uid], self.max_blocks)
+        dead = self.faults.dead_shards()
+        with maybe_set_mesh(self.mesh), dead_shard_fault(dead):
+            row, self.cache.pools = self._mesh_prefill_fn(bucket, dead)(
+                self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32),
+                self.cache.pools, bt,
+            )
         if self.faults.fires("nan_logits", entry.uid) is not None:
             row = jnp.full_like(row, jnp.nan)
         return row

@@ -60,6 +60,7 @@ COUNTER_KEYS = (
     "restore_retries",  # faulting restores retried with backoff
     "watchdog_fails",  # global-stall watchdog fired
     "degraded_prefills",  # prompts served under coarser grouping
+    "mesh_prefills",  # whole-prompt ring prefills (mesh one-tick admission)
 )
 
 #: Per-request metrics() row keys shared by both engines and the scheduler.

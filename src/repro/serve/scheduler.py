@@ -33,6 +33,14 @@ slab) frees up — admission is *slot*-bound.  This scheduler makes admission
     (``cancelled``); numeric-health and fault failures quarantine exactly
     the offending request (``failed``) — the batch keeps running.
 
+  * **Mesh one-tick admission.**  A mesh-capable paged engine
+    (``PagedServeEngine(mesh=)``) exposes ``prefill_mesh_run`` +
+    ``mesh_prefill_ready``: a long prompt's whole prefill runs as ONE
+    exact ring sequence-parallel forward across the engine's mesh and its
+    K/V lands in the (single-device) block pool in the same tick —
+    replacing ceil(n/chunk) chunked ticks at no accuracy cost.  Short
+    prompts keep chunked prefill (nothing to amortise).
+
   * **Graceful degradation** (serve.degrade).  An optional hysteresis
     controller watches queue depth (and optionally rolling p50 TTFT) and,
     under sustained overload, switches *new* prompts from exact chunked
@@ -479,6 +487,37 @@ class Scheduler:
                 # cost far more than the wait).
                 self.waiting.appendleft(head)
                 break
+            if (head.prompt_done == 0
+                    and hasattr(engine, "prefill_mesh_run")
+                    and engine.mesh_prefill_ready(len(head.req.prompt))):
+                # Mesh admission: one whole-prompt EXACT prefill across the
+                # engine's context-parallel ring replaces ceil(n/chunk)
+                # chunks — the long prompt's TTFT collapses to a single
+                # tick with no accuracy cost (the degraded branch below
+                # stays the overload valve for non-mesh engines).
+                n = len(head.req.prompt)
+                if not engine.alloc(head, n):
+                    self.waiting.appendleft(head)
+                    break
+                head.req.status = lifecycle.PREFILL
+                try:
+                    row = engine.prefill_mesh_run(head)
+                except InjectedFault:
+                    # mesh_prefill / stuck_step raise BEFORE any pool
+                    # write, so the retry re-runs against clean blocks.
+                    if self._step_fault(engine, head, finished):
+                        progressed = True
+                    else:
+                        self.waiting.appendleft(head)
+                    break
+                head.step_tries = 0
+                head.prompt_done = n
+                head.length = n
+                self.counters["mesh_prefills"] += 1
+                budget -= n
+                progressed = True
+                self._finish_prompt(engine, head, row, finished)
+                continue
             if (self._level > 0 and head.prompt_done == 0
                     and hasattr(engine, "prefill_full_run")):
                 # Degraded admission: one whole-prompt DistrAttention
@@ -605,7 +644,14 @@ class Scheduler:
                         hit_eos = (
                             e.req.eos_id is not None and t == e.req.eos_id
                         )
-                        full = e.length >= engine.capacity_tokens - 1
+                        # Window-decoding engines slide past the table
+                        # bound (head-block recycling) — only engines
+                        # without the ring-write invariant force-finish
+                        # at capacity.
+                        full = (
+                            not getattr(engine, "window_decode", False)
+                            and e.length >= engine.capacity_tokens - 1
+                        )
                         if limit or hit_eos or full:
                             e.req.done = True
                             self._finalize(e, engine, lifecycle.DONE)

@@ -123,26 +123,15 @@ def make_prefill(cfg, max_len: int, backbone_cfg=None):
     return prefill
 
 
-def make_degraded_paged_prefill(cfg, bucket: int, group_size: int):
-    """→ prefill(params, tokens (1, bucket), n (1,), pools, block_tables)
-    → (last-live-row logits (V,), pools).
-
-    The graceful-degradation prefill (serve.degrade): under sustained
-    overload the scheduler trades chunked *exact* prefill for one
-    whole-prompt forward whose attention runs DistrAttention at grouping
-    fraction 1/``group_size`` (``core.api.AttentionConfig.degraded`` — the
-    paper's accuracy↔speed dial), then scatters the resulting K/V into the
-    request's pool blocks through the block table
+def _make_paged_full_prefill(cfg, backbone_cfg):
+    """Shared whole-prompt paged prefill body: one backbone forward under
+    ``backbone_cfg``, last-live-row logits, and a scatter of every layer's
+    K/V into the request's pool blocks through the block table
     (``models.attention.paged_insert``; padded rows divert to the garbage
-    block).  One step replaces ``ceil(n / prefill_chunk)`` chunk steps —
-    TTFT under pressure drops to a single tick — at an attributable
-    accuracy cost recorded per request (``Request.degrade_group``).
-
-    The KV written is the backbone's own K/V (same convention as the exact
-    paths); approximation enters only through the degraded attention's
-    effect on the hidden states, so decode continues on the standard paged
-    kernels untouched.
-    """
+    block).  The fused K̂ — when the engine decodes fused — is always
+    written at the engine's ORIGINAL group size from its static per-layer
+    permutations, whatever attention ``backbone_cfg`` ran: the cache
+    layout belongs to the engine, the forward pass to the caller."""
     if cfg.family not in ("dense", "moe") or cfg.use_mla:
         raise NotImplementedError(
             f"paged serving covers GQA dense/moe; family={cfg.family!r} "
@@ -150,12 +139,11 @@ def make_degraded_paged_prefill(cfg, bucket: int, group_size: int):
         )
     from repro.models.attention import paged_insert
 
-    dcfg = cfg.replace(attention=cfg.attention.degraded(group_size))
     fused = cfg.attention.distr_decode and cfg.family == "dense"
 
     def prefill(params, tokens, n, pools, block_tables):
         hidden, _aux, parts, _ = lm.backbone(
-            params, dcfg, tokens, collect_cache=True
+            params, backbone_cfg, tokens, collect_cache=True
         )
         # Exact last-live-position logits: causal attention means padded
         # rows past n-1 never feed row n-1 (the LSH permutations of the
@@ -184,6 +172,54 @@ def make_degraded_paged_prefill(cfg, bucket: int, group_size: int):
         return logits, new_pools
 
     return prefill
+
+
+def make_degraded_paged_prefill(cfg, bucket: int, group_size: int):
+    """→ prefill(params, tokens (1, bucket), n (1,), pools, block_tables)
+    → (last-live-row logits (V,), pools).
+
+    The graceful-degradation prefill (serve.degrade): under sustained
+    overload the scheduler trades chunked *exact* prefill for one
+    whole-prompt forward whose attention runs DistrAttention at grouping
+    fraction 1/``group_size`` (``core.api.AttentionConfig.degraded`` — the
+    paper's accuracy↔speed dial), then scatters the resulting K/V into the
+    request's pool blocks through the block table.  One step replaces
+    ``ceil(n / prefill_chunk)`` chunk steps — TTFT under pressure drops to
+    a single tick — at an attributable accuracy cost recorded per request
+    (``Request.degrade_group``).
+
+    The KV written is the backbone's own K/V (same convention as the exact
+    paths); approximation enters only through the degraded attention's
+    effect on the hidden states, so decode continues on the standard paged
+    kernels untouched.
+    """
+    del bucket  # shapes ride on ``tokens``; the engine keys its jit cache
+    dcfg = cfg.replace(attention=cfg.attention.degraded(group_size))
+    return _make_paged_full_prefill(cfg, dcfg)
+
+
+def make_mesh_paged_prefill(cfg, bucket: int):
+    """→ prefill(params, tokens (1, bucket), n (1,), pools, block_tables)
+    → (last-live-row logits (V,), pools).
+
+    The mesh-capable whole-prompt prefill (paged × ring composition): the
+    returned function is *traced under the engine's context mesh* —
+    ``PagedServeEngine(mesh=)`` wraps the jitted call in ``maybe_set_mesh``
+    — so the backbone's attention dispatches through ``core.api.attend`` to
+    the ring (``distributed.ring_attention``) whenever the padded bucket
+    spans at least ``ring_size × MIN_RING_SHARD`` tokens.  One long prompt
+    prefills across the whole ring in a single step; GSPMD gathers each
+    layer's K/V back to global arrays at the shard_map boundary, and the
+    scatter lands them in ONE device's block pool through the block table —
+    the prefill is distributed, the decode-side KV residency is not.
+
+    The forward runs the engine's own *exact* attention config (no
+    degradation); the fused K̂ is written at the original group size — the
+    same invariant as the degraded prefill — so decode continues on the
+    standard paged kernels untouched.
+    """
+    del bucket  # shapes ride on ``tokens``; the engine keys its jit cache
+    return _make_paged_full_prefill(cfg, cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -839,23 +839,49 @@ def resolve_paged_decode_block(**kw) -> int:
     return get_autotuner().resolve_paged_decode(**kw)
 
 
-def warm_paged_engine(cfg, max_len: int) -> dict:
+def warm_paged_engine(cfg, max_len: int, *, decode: bool = True,
+                      mesh_prefill_buckets: bool = False,
+                      buckets=(32, 64, 128, 256, 512, 1024,
+                               2048, 4096)) -> dict:
     """Pre-resolve the block-size keys a PagedServeEngine will hit: the
     paged-decode pool block (which shapes the pools themselves, so it MUST
     resolve before construction).  Measure-mode sweeps run here, once —
     mirroring :func:`warm_engine` for the slot engine.  Returns
-    {site: resolved} for logging."""
+    {site: resolved} for logging.
+
+    ``mesh_prefill_buckets`` additionally resolves the whole-prompt
+    ring-prefill attend at each bucket ≤ max_len (the mesh engine's
+    ``prefill_mesh_run`` buckets).  Call it with the engine's mesh ACTIVE
+    (``maybe_set_mesh``): ``api.resolve_attention_blocks`` then keys each
+    bucket by its per-ring-shard sequence length, so the tuned tile sizes
+    match what each device actually runs — the same per-shard keying the
+    slot engine's long-prompt path gets from :func:`warm_engine`."""
     out: dict = {}
     if cfg.attention.impl == "reference":
         return out
     g = (
         cfg.attention.distr.group_size if cfg.attention.distr_decode else 1
     )
-    # Keyed by the KV-pool dtype (bf16, the serve default), like the
-    # contiguous decode key.
-    out["paged_decode"] = get_autotuner().resolve_paged_decode(
-        d=cfg.head_dim_, n=max_len, dtype="bfloat16", group_size=g
-    )
+    if decode:
+        # Keyed by the KV-pool dtype (bf16, the serve default), like the
+        # contiguous decode key.
+        out["paged_decode"] = get_autotuner().resolve_paged_decode(
+            d=cfg.head_dim_, n=max_len, dtype="bfloat16", group_size=g
+        )
+    if mesh_prefill_buckets:
+        from repro.core import api
+
+        dtype = (
+            "bfloat16" if getattr(cfg, "compute_dtype", "") == "bfloat16"
+            else "float32"
+        )
+        live = sorted({min(b, max_len) for b in buckets if b <= max_len}
+                      | {max_len})
+        for b in live:
+            out[f"mesh_prefill/{b}"] = api.resolve_attention_blocks(
+                cfg.attention, d=cfg.head_dim_, n_q=b, n_k=b, dtype=dtype,
+                causal=True,
+            )
     return out
 
 

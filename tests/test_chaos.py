@@ -280,6 +280,28 @@ class DegradedFakeEngine(FakeEngine):
         return entry.uid
 
 
+class MeshFakeEngine(FakeEngine):
+    """FakeEngine + the mesh-admission surface (ISSUE 9): whole-prompt
+    one-tick prefill, consulting the mesh_prefill fault point BEFORE any
+    pool mutation — exactly like PagedServeEngine.prefill_mesh_run."""
+
+    def __init__(self, threshold=8, **kw):
+        super().__init__(**kw)
+        self.threshold = threshold
+        self.mesh_prompts: list[int] = []
+
+    def mesh_prefill_ready(self, n):
+        return n > self.threshold
+
+    def prefill_mesh_run(self, entry):
+        self.faults.raise_if("stuck_step", entry.uid)
+        self.faults.raise_if("mesh_prefill", entry.uid)
+        self.mesh_prompts.append(entry.uid)
+        if self.faults.fires("nan_logits", entry.uid) is not None:
+            return np.nan
+        return entry.uid
+
+
 class TickClock:
     """Injectable tick-domain clock: deadlines and TTFT in ticks."""
 
@@ -582,6 +604,79 @@ def test_every_fault_reaches_terminal_status(point, kw):
     eng = FakeEngine(faults=FaultInjector([FaultSpec(point, **kw)]))
     sched = _sched(eng, watchdog_ticks=6)
     reqs = [FakeReq(uid) for uid in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    drive(sched, eng)
+    assert_all_terminal_and_clean(sched, eng, reqs)
+
+
+def test_mesh_prefill_one_tick_admission():
+    """A prompt longer than the mesh threshold admits whole in one tick
+    (counted as a mesh_prefill); shorter prompts still take the chunked
+    path — and both drain clean."""
+    eng = MeshFakeEngine(threshold=8)
+    sched = _sched(eng, chunk=4)
+    long_reqs = [FakeReq(uid, n_prompt=16, max_new=3) for uid in (0, 1)]
+    short = FakeReq(2, n_prompt=6, max_new=3)
+    for r in long_reqs + [short]:
+        sched.submit(r)
+    drive(sched, eng)
+    assert_all_terminal_and_clean(sched, eng, long_reqs + [short])
+    assert all(r.status == lifecycle.DONE for r in long_reqs + [short])
+    assert eng.mesh_prompts == [0, 1]
+    assert 2 not in eng.mesh_prompts, "short prompt took the mesh path"
+    assert sched.counters["mesh_prefills"] == 2
+
+
+def test_mesh_prefill_transient_fault_recovers():
+    """A mesh_prefill fault within the retry budget costs ticks, not the
+    request: it raises BEFORE pool mutation, so the retry re-runs against
+    clean blocks."""
+    eng = MeshFakeEngine(threshold=8, faults=FaultInjector(
+        [FaultSpec("mesh_prefill", uid=1, times=2)]
+    ))
+    sched = _sched(eng)
+    reqs = [FakeReq(uid, n_prompt=16, max_new=3) for uid in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    drive(sched, eng)
+    assert_all_terminal_and_clean(sched, eng, reqs)
+    assert all(r.status == lifecycle.DONE for r in reqs)
+    assert sched.counters["step_retries"] == 2
+    assert sched.counters["mesh_prefills"] == 3
+
+
+def test_mesh_prefill_persistent_fault_fails_culprit_only():
+    eng = MeshFakeEngine(threshold=8, faults=FaultInjector(
+        [FaultSpec("mesh_prefill", uid=1, times=-1)]
+    ))
+    sched = _sched(eng)
+    reqs = [FakeReq(uid, n_prompt=16, max_new=3) for uid in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    drive(sched, eng)
+    assert_all_terminal_and_clean(sched, eng, reqs)
+    assert reqs[1].status == lifecycle.FAILED
+    assert reqs[0].status == lifecycle.DONE
+    assert reqs[2].status == lifecycle.DONE
+    assert sched.counters["failed_fault"] == 1
+    assert 1 not in eng.mesh_prompts, "faulted prefill mutated the pool"
+
+
+@pytest.mark.parametrize("point,kw", [
+    ("mesh_prefill", dict(uid=1, times=-1)),
+    ("nan_logits", dict(uid=1, times=-1)),
+    ("stuck_step", dict(uid=1, times=-1)),
+    ("pool_exhausted", dict(uid=1, times=-1)),
+])
+def test_every_fault_reaches_terminal_under_mesh_admission(point, kw):
+    """The blanket terminal-status contract holds when admission goes
+    through the mesh path too."""
+    eng = MeshFakeEngine(threshold=4, faults=FaultInjector(
+        [FaultSpec(point, **kw)]
+    ))
+    sched = _sched(eng, watchdog_ticks=6)
+    reqs = [FakeReq(uid) for uid in range(4)]  # 8 > 4: all mesh-admitted
     for r in reqs:
         sched.submit(r)
     drive(sched, eng)

@@ -670,6 +670,111 @@ def test_p2c_health_weighting_prefers_clean_replica():
 
 
 # ---------------------------------------------------------------------------
+# Capability steering (ISSUE 9: mesh-capable replicas)
+# ---------------------------------------------------------------------------
+
+
+class _CappedClient(FakeReplicaClient):
+    """A fake replica advertising a prompt-length capability, like a real
+    ``EngineReplica`` over an engine with a bounded cache (``None`` =
+    unlimited, the legacy surface)."""
+
+    def __init__(self, cap, **kw):
+        super().__init__(**kw)
+        self.max_prompt_len = cap
+
+
+def test_capability_steering_routes_long_prompts_to_capable_replica():
+    """A prompt longer than a replica's advertised max_prompt_len never
+    lands there: round-robin cycles over the CAPABLE candidates only,
+    while short prompts still spread over everyone."""
+    clients = [_CappedClient(4), _CappedClient(4), _CappedClient(None)]
+    router = ClusterRouter(clients, policy="round_robin",
+                           clock=lambda: 0.0)
+    long_prompt = list(range(1, 13))  # 12 > 4
+    long_uids = [router.add_request(long_prompt, max_new_tokens=3)
+                 for _ in range(3)]
+    for u in long_uids:
+        assert router.request(u).rid == 2, (
+            "long prompt routed to an incapable replica"
+        )
+    short_uids = [router.add_request([1, 2], max_new_tokens=2)
+                  for _ in range(6)]
+    assert {router.request(u).rid for u in short_uids} == {0, 1, 2}
+    _drive(router)
+    for u in long_uids:
+        creq = router.request(u)
+        assert creq.status == lifecycle.DONE
+        assert creq.emitted == expected_stream(long_prompt, 3)
+    assert router.counters_snapshot()["capability_rejects"] == 0
+
+
+def test_capability_reject_when_no_replica_can_hold_prompt():
+    clients = [_CappedClient(4), _CappedClient(6)]
+    router = ClusterRouter(clients, policy="round_robin",
+                           clock=lambda: 0.0)
+    uid = router.add_request(list(range(10)), max_new_tokens=2)
+    assert router.request(uid).status == lifecycle.REJECTED
+    snap = router.counters_snapshot()
+    assert snap["capability_rejects"] == 1
+    assert snap["no_replica_rejects"] == 0  # replicas were routable
+    assert not router.has_work()
+
+
+def test_failover_replay_respects_capability():
+    """Redelivery after a crash filters survivors by prompt+emitted length:
+    the replay lands only on a replica that can hold it, and the stream
+    stays bit-identical."""
+    clients = [_CappedClient(64), _CappedClient(4), _CappedClient(64)]
+    faults = FaultInjector([FaultSpec("replica_crash", uid=0, after=2)])
+    router = ClusterRouter(clients, policy="round_robin", faults=faults,
+                           clock=lambda: 0.0)
+    prompt = list(range(3, 11))  # 8 tokens: only rids 0 and 2 can hold it
+    uid = router.add_request(prompt, max_new_tokens=6)
+    assert router.request(uid).rid == 0
+    _drive(router)
+    creq = router.request(uid)
+    assert creq.status == lifecycle.DONE
+    assert creq.redeliveries == 1
+    assert creq.rid == 2, "replay landed on an incapable replica"
+    assert creq.emitted == expected_stream(prompt, 6)
+
+
+def test_failover_fails_when_no_capable_survivor():
+    """If the only replica that could hold a request dies and no survivor
+    is capable, the request FAILS (failover_failed) — it is never wedged
+    into a replica that would reject or corrupt it — while short work on
+    the survivor keeps completing."""
+    clients = [_CappedClient(64), _CappedClient(4)]
+    faults = FaultInjector([FaultSpec("replica_crash", uid=0, after=1)])
+    router = ClusterRouter(clients, policy="round_robin", faults=faults,
+                           clock=lambda: 0.0)
+    uid = router.add_request(list(range(8)), max_new_tokens=6)
+    assert router.request(uid).rid == 0
+    ok = router.add_request([1, 2], max_new_tokens=2)
+    _drive(router, max_ticks=60)
+    assert router.request(uid).status == lifecycle.FAILED
+    assert router.counters_snapshot()["failover_failed"] == 1
+    assert router.request(ok).status == lifecycle.DONE
+
+
+def test_engine_replica_advertises_max_prompt_len(small_lm):
+    """The real-engine surface: a slot engine advertises max_len, a paged
+    engine min(max_len, capacity − 1) — the numbers add_request actually
+    enforces."""
+    slot = _slot_engine(small_lm, max_len=64)
+    paged = _paged_engine(small_lm, max_len=64, block_size=8)
+    assert EngineReplica(slot).max_prompt_len() == 64
+    assert EngineReplica(paged).max_prompt_len() == min(
+        64, paged.capacity_tokens - 1
+    )
+    # a client with no capability surface routes as unlimited
+    assert ClusterRouter._capacity(
+        ReplicaHandle(0, FakeReplicaClient())
+    ) is None
+
+
+# ---------------------------------------------------------------------------
 # run_to_completion / misc
 # ---------------------------------------------------------------------------
 

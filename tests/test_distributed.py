@@ -391,6 +391,51 @@ def test_ring_distr_parity_8dev():
 
 
 @pytest.mark.slow
+def test_ring_distr_shared_kv_perm_parity_8dev():
+    """Ring DistrAttention with shared_kv_perm (one permutation per KV
+    group, derived from the group's mean query block) == the single-device
+    kernel, fwd + grads.  This used to raise NotImplementedError under the
+    ring; stage 1 now runs the shared ops.distr_stage1 outside shard_map,
+    so the variant composes for free."""
+    _run_subprocess(
+        """
+        from repro.core.distr_attention import DistrConfig
+        from repro.distributed.ring_attention import ring_distr_attention
+        from repro.kernels import ops
+        ring = compat_make_mesh((8,), ("context",))
+        B, Hq, Hkv, N, D = 2, 4, 2, 300, 64
+        dcfg = DistrConfig(group_size=2, shared_kv_perm=True)
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, Hq, N, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Hkv, N, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Hkv, N, D), jnp.float32)
+        w = jax.random.normal(ks[3], (B, Hq, N, D), jnp.float32)
+        for causal in (False, True):
+            out, hops = jax.jit(lambda q, k, v: ring_distr_attention(
+                q, k, v, dcfg, ring, causal=causal, return_hops=True
+            ))(q, k, v)
+            ref = ops.distr_attention(q, k, v, dcfg, causal=causal)
+            err = float(jnp.abs(out - ref).max())
+            assert err < 2e-5, (causal, err)
+            assert int(hops) == (6 if causal else 9), (causal, int(hops))
+            gr = jax.jit(jax.grad(
+                lambda q, k, v: (ring_distr_attention(
+                    q, k, v, dcfg, ring, causal=causal
+                ) * w).sum(), argnums=(0, 1, 2)
+            ))(q, k, v)
+            gs = jax.grad(
+                lambda q, k, v: (ops.distr_attention(
+                    q, k, v, dcfg, causal=causal
+                ) * w).sum(), argnums=(0, 1, 2)
+            )(q, k, v)
+            gerr = max(float(jnp.abs(a - b).max()) for a, b in zip(gr, gs))
+            assert gerr < 5e-5, (causal, gerr)
+        print("RING SHARED PERM OK")
+        """
+    )
+
+
+@pytest.mark.slow
 def test_attend_context_axis_dispatch_8dev():
     """core.api.attend routes to the ring under an active mesh with the
     configured context axis — including a mixed (data, context, model) mesh
@@ -494,6 +539,64 @@ def test_serve_engine_ring_prefill_matches_single_device():
         want = eng0.run_to_completion()[0].generated
         assert got == want, (got, want)
         print("SERVE RING OK", got)
+        """
+    )
+
+
+@pytest.mark.slow
+def test_paged_engine_mesh_prefill_matches_single_device():
+    """ISSUE 9 acceptance: a long prompt on PagedServeEngine(mesh=...)
+    prefills whole across the context ring in one tick (mesh_prefills
+    counter), lands its KV in the block pool spanning ≥ 3 blocks, and the
+    paged greedy decode matches a mesh-less engine token for token.  The
+    cluster router steers the long prompt to the mesh-capable replica and
+    away from a short-cache one."""
+    _run_subprocess(
+        """
+        from dataclasses import replace as dc_replace
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.serve.cluster import ClusterRouter
+        from repro.serve.engine import PagedServeEngine
+        from repro.serve import lifecycle
+
+        cfg = get_config("qwen1.5-4b", reduced=True)
+        cfg = cfg.replace(attention=dc_replace(
+            cfg.attention, impl="pallas_flash", context_axis="context"))
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        ring = compat_make_mesh((2,), ("context",))
+        prompt = list(np.random.RandomState(0).randint(
+            0, cfg.vocab, size=300))  # bucket 512 ≥ ring×128 → ring prefill
+
+        eng = PagedServeEngine(
+            cfg, params, max_batch=2, max_len=512, block_size=128,
+            prefill_chunk=32, cache_dtype=jnp.float32, mesh=ring)
+        assert eng.cache.blocks_for(len(prompt)) >= 3  # spans ≥ 3 blocks
+        eng.add_request(prompt, max_new_tokens=3)
+        got = eng.run_to_completion()[0].generated
+        assert eng.counters_snapshot()["mesh_prefills"] == 1
+
+        cfg0 = cfg.replace(attention=dc_replace(
+            cfg.attention, context_axis=None))
+        eng0 = PagedServeEngine(
+            cfg0, params, max_batch=2, max_len=512, block_size=128,
+            prefill_chunk=32, cache_dtype=jnp.float32)
+        eng0.add_request(prompt, max_new_tokens=3)
+        want = eng0.run_to_completion()[0].generated
+        assert got == want, (got, want)
+
+        # capability routing: a short-cache replica never sees the prompt
+        short = PagedServeEngine(
+            cfg0, params, max_batch=2, max_len=64, block_size=64,
+            prefill_chunk=32, cache_dtype=jnp.float32)
+        router = ClusterRouter([short, eng], policy="round_robin")
+        uid = router.add_request(prompt, max_new_tokens=3)
+        assert router.request(uid).rid == 1, "long prompt missed the mesh replica"
+        router.run_to_completion(max_ticks=600)
+        creq = router.request(uid)
+        assert creq.status == lifecycle.DONE
+        assert creq.emitted == want, (creq.emitted, want)
+        print("MESH PAGED OK", got)
         """
     )
 

@@ -529,3 +529,80 @@ def test_paged_engine_rejects_overlong_prompt_and_bad_pool():
     with pytest.raises(ValueError, match="full request"):
         PagedServeEngine(cfg, params, max_batch=2, max_len=32, block_size=8,
                          num_blocks=3, prefill_chunk=8)
+
+
+# ---------------------------------------------------------------------------
+# Windowed decode past capacity (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_windowed_decode_matches_slot_sliding_window():
+    """Decode past the table capacity recycles the request's HEAD blocks in
+    place (write at ``pos mod capacity``, attend the last ``capacity``
+    tokens) — logits equal the slot engine's sliding-window decode
+    (make_decode_step) with ``max_len == capacity``, step for step."""
+    cfg = get_config("qwen2.5-32b", reduced=True)  # exact impl for parity
+    cfg = cfg.replace(attention=cfg.attention.with_impl("pallas_flash"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    bs, mb = 8, 2  # capacity 16
+    n, steps = 10, 12  # decode positions 10..21 — wraps at 16
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (1, n + steps), 0, cfg.vocab
+    )
+
+    # slot path: contiguous ring cache of exactly `capacity` slots
+    _, cache = make_prefill(cfg, mb * bs)(params, toks[:, :n])
+    cache["length"] = jnp.asarray([n], jnp.int32)
+    dec_slot = make_decode_step(cfg)
+    want = []
+    for i in range(n, n + steps):
+        lg, cache = dec_slot(
+            params, toks[:, i : i + 1], cache, jnp.asarray([i], jnp.int32)
+        )
+        want.append(np.asarray(lg[:, 0], np.float32))
+
+    # paged path: same capacity through the block table, decoded past it
+    pcache = paged.PagedKVCache(cfg, 1 + mb, bs, dtype=jnp.float32)
+    chunk = make_paged_step(cfg, 8)
+    done = 0
+    while done < n:
+        c = min(8, n - done)
+        pcache.allocate_to(0, done + c)
+        bt = pcache.table_array([0], mb)
+        tk = np.zeros((1, 8), np.int32)
+        tk[0, :c] = np.asarray(toks[0, done : done + c])
+        _, pcache.pools = chunk(
+            params, jnp.asarray(tk), pcache.pools, bt,
+            jnp.asarray([done], jnp.int32), jnp.asarray([c], jnp.int32),
+        )
+        done += c
+    pcache.allocate_to(0, mb * bs)  # full table; further growth is a no-op
+    bt = pcache.table_array([0], mb)
+    dec = make_paged_step(cfg, 1)
+    for step in range(steps):
+        lg, pcache.pools = dec(
+            params, toks[:, n + step : n + step + 1], pcache.pools, bt,
+            jnp.asarray([n + step], jnp.int32), jnp.asarray([1], jnp.int32),
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32), want[step],
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_paged_engine_decode_crosses_capacity():
+    """``max_new_tokens`` may cross the table capacity: the request is
+    accepted (only PROMPTS are capacity-bound) and decodes its full budget
+    by recycling head blocks instead of being force-finished at the
+    capacity bound."""
+    cfg = get_config("minicpm-2b", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = PagedServeEngine(cfg, params, max_batch=2, max_len=16,
+                           block_size=8, prefill_chunk=8)
+    assert eng.capacity_tokens == 16
+    uid = eng.add_request([3, 1, 4, 1, 5, 9], max_new_tokens=20)  # 6+20 > 16
+    done = eng.run_to_completion(max_steps=200)
+    (req,) = done
+    assert req.uid == uid
+    assert len(req.generated) == 20
+    assert eng.cache.pool.num_free == eng.cache.pool.num_blocks - 1
