@@ -16,16 +16,24 @@ import jax
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
+#: BENCH record schema.  v1 = the historical unstamped records (no
+#: ``schema`` field); v2 adds the stamp (schema + backend/interpret on
+#: every record) so benchmarks/regress.py can key bounds per-row and
+#: per-backend instead of guessing from filenames.
+SCHEMA_VERSION = 2
+
 
 def backend_info(interpret: bool | None = None) -> dict:
-    """Labels for timing records: the JAX backend and whether Pallas kernels
-    ran in interpreter mode (None → ``kernels.ops.default_interpret``, the
-    same rule the ops apply; pass False for pure-XLA timings)."""
+    """The shared per-record stamp: schema version, the JAX backend, and
+    whether Pallas kernels ran in interpreter mode (None →
+    ``kernels.ops.default_interpret``, the same rule the ops apply; pass
+    False for pure-XLA timings)."""
     from repro.kernels.ops import default_interpret
 
     if interpret is None:
         interpret = default_interpret()
-    return {"backend": jax.default_backend(), "interpret": bool(interpret)}
+    return {"schema": SCHEMA_VERSION, "backend": jax.default_backend(),
+            "interpret": bool(interpret)}
 
 
 def timing_label(interpret: bool | None = None) -> str:

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+from repro.obs.utilization import utilization_columns
 from repro.roofline.analysis import decode_attention_cost
 from benchmarks.common import backend_info, save_result, timeit, timing_label
 
@@ -70,6 +71,10 @@ def run(smoke: bool = False) -> list[tuple]:
             kv_bytes_per_token=cost["kv_bytes"],
             dense_kv_bytes_per_token=cost["dense_kv_bytes"],
             hbm_bytes_per_token=cost["hbm_bytes"],
+            # Measured-vs-roofline: the achieved fraction of the analytic
+            # lower bound (tiny on CPU interpret; ~O(1) on real TPUs —
+            # regress.py bounds this per-backend).
+            **utilization_columns(cost, t_kernel),
             **backend_info(),
         )
         records.append(rec)

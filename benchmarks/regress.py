@@ -9,12 +9,16 @@ suite: CI runs ``python -m benchmarks.regress`` right after the benchmark
 smoke pass.
 
 Bounds are declarative: a :class:`Bound` names the file, a record
-selector (``kind`` plus optional extra field matches), the metric, and
-the floor.  Floors are set from the recorded reference run with headroom
-for benign drift — they gate *collapses* (a failover path that stops
-retaining goodput), not noise.  Regenerating a BENCH file with a
-legitimately different trade-off means revisiting the floor here, on
-purpose, in the same commit.
+selector (``kind`` plus optional extra field matches; ``kind=None``
+selects rows in files whose records carry no ``kind`` field, and
+``backend`` keys a bound to one backend's records), the metric, and a
+floor plus optional ceiling — a *tolerance band*.  Floors are set from
+the recorded reference run with headroom for benign drift — they gate
+*collapses* (a failover path that stops retaining goodput), not noise;
+ceilings gate impossibilities (a measured-vs-roofline utilization above
+1.0 means the cost model or the timer is wrong).  Regenerating a BENCH
+file with a legitimately different trade-off means revisiting the band
+here, on purpose, in the same commit.
 """
 from __future__ import annotations
 
@@ -28,15 +32,19 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 @dataclass(frozen=True)
 class Bound:
-    """``metric`` of the record matching ``kind`` (+ ``match`` fields) in
-    ``path`` must be ≥ ``floor``."""
+    """``metric`` of every record matching ``kind`` (+ ``match`` fields,
+    + ``backend``) in ``path`` must be ≥ ``floor`` and, when a ``ceiling``
+    is set, ≤ ``ceiling``.  ``kind=None`` skips the kind filter — the
+    selector for BENCH files whose per-row records carry no ``kind``."""
 
     path: str  # BENCH file, relative to the repo root
-    kind: str  # record selector: record["kind"] == kind
+    kind: str | None  # record selector: record["kind"] == kind (None: all)
     metric: str
     floor: float
     match: tuple = field(default_factory=tuple)  # extra (key, value) pairs
     note: str = ""
+    ceiling: float | None = None  # band upper bound (None: floor only)
+    backend: str | None = None  # key the bound to one backend's records
 
 
 #: The recorded floors.  BENCH_cluster.json reference (3 paged replicas,
@@ -90,25 +98,189 @@ BOUNDS = (
         metric="chunked_over_mesh_ttft_ticks", floor=2.0,
         note="whole-prompt ring admission must collapse TTFT vs chunked",
     ),
+    # ------------------------------------------------------------------
+    # Per-row / per-backend bounds (BENCH schema v2).  The recorded
+    # reference is the CPU-interpret run committed at the repo root, so
+    # every row bound below is keyed backend="cpu"; a real-TPU
+    # regeneration adds its own rows and its own bounds without touching
+    # these.
+    #
+    # BENCH_cluster.json rows: all three policies complete 15/15 in the
+    # healthy run; the kill scenario redelivers the 3 orphans of the dead
+    # replica with zero failover failures; the drain migrates all 3.
+    Bound(
+        path="BENCH_cluster.json", kind="policy", metric="goodput",
+        floor=0.9, match=(("policy", "p2c"),), backend="cpu",
+        note="p2c routing must complete effectively all healthy requests",
+    ),
+    Bound(
+        path="BENCH_cluster.json", kind="disruption", metric="redelivered",
+        floor=1.0, match=(("scenario", "kill"),), backend="cpu",
+        note="a replica kill must orphan and redeliver in-flight requests",
+    ),
+    Bound(
+        path="BENCH_cluster.json", kind="disruption", metric="failover_failed",
+        floor=0.0, ceiling=0.0, match=(("scenario", "kill"),), backend="cpu",
+        note="failover after a kill must never exhaust redelivery attempts",
+    ),
+    Bound(
+        path="BENCH_cluster.json", kind="disruption", metric="migrated",
+        floor=1.0, match=(("scenario", "drain"),), backend="cpu",
+        note="a planned drain must migrate the drained replica's requests",
+    ),
+    # BENCH_serving.json overload rows (24 requests, 16-tick TTFT
+    # deadlines): the degrade controller trades precision for admission —
+    # recorded goodput 0.625 vs exact 0.542, with 13 degraded prefills.
+    Bound(
+        path="BENCH_serving.json", kind="overload", metric="goodput",
+        floor=0.5, match=(("controller", "degrade"),), backend="cpu",
+        note="the degradation dial must buy goodput under overload",
+    ),
+    Bound(
+        path="BENCH_serving.json", kind="overload", metric="degraded_prefills",
+        floor=1.0, match=(("controller", "degrade"),), backend="cpu",
+        note="the degrade controller must actually engage under overload",
+    ),
+    Bound(
+        path="BENCH_serving.json", kind="overload", metric="deadline_miss_rate",
+        floor=0.0, ceiling=0.25, match=(("controller", "exact"),),
+        backend="cpu",
+        note="shedding must keep admitted requests inside their deadlines",
+    ),
+    # BENCH_decode.json rows (no "kind" on per-length rows): the
+    # measured-vs-roofline utilization band.  On CPU interpret the
+    # achieved fraction of the analytic TPU lower bound is tiny (~1e-5)
+    # but must be positive and can never exceed 1.0 — a value above the
+    # ceiling means the cost model or the timer is wrong, a zero/negative
+    # value means the columns stopped being emitted from measurements.
+    Bound(
+        path="BENCH_decode.json", kind=None, metric="roofline_util",
+        floor=1e-9, ceiling=1.0, match=(("live_length", 64),), backend="cpu",
+        note="achieved fraction of the roofline bound must be in (0, 1]",
+    ),
+    Bound(
+        path="BENCH_decode.json", kind=None, metric="roofline_util",
+        floor=1e-9, ceiling=1.0, match=(("live_length", 512),), backend="cpu",
+        note="achieved fraction of the roofline bound must be in (0, 1]",
+    ),
+    Bound(
+        path="BENCH_decode.json", kind="kv_scaling",
+        metric="kv_bytes_ratio_512_vs_64", floor=4.0, backend="cpu",
+        note="live-length KV scaling: ≥2× fewer bytes at 64 than 512",
+    ),
+    # BENCH_ring.json rows (no "kind"): the causal ring skips fully-masked
+    # hops, so the hop count is exactly d(d+1)/2 — 36 for 8 devices, 1 for
+    # a single device.  More hops = masking broke; fewer = steps skipped.
+    Bound(
+        path="BENCH_ring.json", kind=None, metric="hops",
+        floor=8.0, ceiling=36.0, match=(("devices", 8),), backend="cpu",
+        note="causal ring hop count is d(d+1)/2 = 36 on 8 devices",
+    ),
+    Bound(
+        path="BENCH_ring.json", kind=None, metric="hops",
+        floor=1.0, ceiling=1.0, match=(("devices", 1),), backend="cpu",
+        note="a 1-device ring degenerates to the single local hop",
+    ),
+    # BENCH_attention_bwd.json distr rows: sampled fwd+bwd must do
+    # strictly less MXU work than flash (ratio < 1) without collapsing
+    # the computation — recorded 0.722 (g=2) and 0.583 (g=4).
+    Bound(
+        path="BENCH_attention_bwd.json", kind="distr",
+        metric="fwd_bwd_mxu_ratio_vs_flash", floor=0.5, ceiling=0.95,
+        match=(("n", 128), ("g", 2)), backend="cpu",
+        note="g=2 sampling must cut MXU flops vs flash, not collapse them",
+    ),
+    Bound(
+        path="BENCH_attention_bwd.json", kind="distr",
+        metric="fwd_bwd_mxu_ratio_vs_flash", floor=0.4, ceiling=0.8,
+        match=(("n", 256), ("g", 4)), backend="cpu",
+        note="g=4 sampling must cut MXU flops deeper than g=2",
+    ),
+    # BENCH_autotune.json rows (no "kind"): the tuned pick must never lose
+    # to the default configuration beyond noise (recorded speedups 1.0 —
+    # 1.75; the cache makes the default a candidate, so < 1 is a bug).
+    Bound(
+        path="BENCH_autotune.json", kind=None, metric="speedup_vs_default",
+        floor=0.95, match=(("kernel", "distr_fwd"),), backend="cpu",
+        note="autotuned distr_fwd must not lose to the default config",
+    ),
+    Bound(
+        path="BENCH_autotune.json", kind=None, metric="speedup_vs_default",
+        floor=0.95, match=(("kernel", "decode"), ("d", 64)), backend="cpu",
+        note="autotuned decode must not lose to the default block_k",
+    ),
+    # BENCH_mesh.json rows: whole-prompt ring admission must emit the
+    # first token in the admission tick (TTFT ≤ 1) via mesh prefills.
+    Bound(
+        path="BENCH_mesh.json", kind=None, metric="mesh_prefills",
+        floor=1.0, match=(("mode", "ring_into_paged"),), backend="cpu",
+        note="ring_into_paged must route prompts through the mesh path",
+    ),
+    Bound(
+        path="BENCH_mesh.json", kind=None, metric="ttft_ticks",
+        floor=0.0, ceiling=1.0, match=(("mode", "ring_into_paged"),),
+        backend="cpu",
+        note="whole-prompt admission emits the first token immediately",
+    ),
+    # BENCH_train_chaos.json scenario rows: a kill replays at most one
+    # checkpoint cadence (recorded 2 recovery steps, ckpt_every=6); the
+    # torn-checkpoint scenario must exercise the fallback path.
+    Bound(
+        path="BENCH_train_chaos.json", kind="scenario",
+        metric="recovery_steps", floor=0.0, ceiling=6.0,
+        match=(("scenario", "kill_resume"),), backend="cpu",
+        note="kill replay is bounded by the checkpoint cadence",
+    ),
+    Bound(
+        path="BENCH_train_chaos.json", kind="scenario",
+        metric="torn_ckpt_fallbacks", floor=1.0,
+        match=(("scenario", "torn_resume"),), backend="cpu",
+        note="the torn scenario must hit the verified-fallback path",
+    ),
+    # Schema stamp: every record in every bounded family must carry the
+    # v2 stamp (kind=None + empty match selects all rows in the file; a
+    # record without the field fails with "lacks metric").
+    *[
+        Bound(
+            path=p, kind=None, metric="schema", floor=2.0, ceiling=2.0,
+            note="all BENCH records must carry the v2 schema stamp",
+        )
+        for p in (
+            "BENCH_attention_bwd.json", "BENCH_autotune.json",
+            "BENCH_cluster.json", "BENCH_decode.json", "BENCH_mesh.json",
+            "BENCH_ring.json", "BENCH_serving.json",
+            "BENCH_train_chaos.json",
+        )
+    ],
 )
 
 
 def _select(records: list[dict], bound: Bound) -> list[dict]:
     out = []
     for rec in records:
-        if rec.get("kind") != bound.kind:
+        if bound.kind is not None and rec.get("kind") != bound.kind:
+            continue
+        if bound.backend is not None and rec.get("backend") != bound.backend:
             continue
         if all(rec.get(k) == v for k, v in bound.match):
             out.append(rec)
     return out
 
 
+def _selector(bound: Bound) -> str:
+    """Human-readable record selector for failure messages."""
+    sel = dict(bound.match)
+    if bound.backend is not None:
+        sel["backend"] = bound.backend
+    return f"kind={bound.kind!r} record matching {sel}"
+
+
 def check_bound(records: list[dict], bound: Bound) -> list[str]:
     """Failure messages for one bound against loaded records ([] = pass)."""
     matches = _select(records, bound)
     if not matches:
-        return [f"{bound.path}: no kind={bound.kind!r} record "
-                f"matching {dict(bound.match)} (metric {bound.metric})"]
+        return [f"{bound.path}: no {_selector(bound)} "
+                f"(metric {bound.metric})"]
     failures = []
     for rec in matches:
         val = rec.get(bound.metric)
@@ -121,6 +293,12 @@ def check_bound(records: list[dict], bound: Bound) -> list[str]:
             failures.append(
                 f"{bound.path}: {bound.metric} = {float(val):.3f} "
                 f"< floor {bound.floor:.3f}"
+                + (f" ({bound.note})" if bound.note else "")
+            )
+        elif bound.ceiling is not None and float(val) > bound.ceiling:
+            failures.append(
+                f"{bound.path}: {bound.metric} = {float(val):.3f} "
+                f"> ceiling {bound.ceiling:.3f}"
                 + (f" ({bound.note})" if bound.note else "")
             )
     return failures

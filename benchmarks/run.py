@@ -37,11 +37,18 @@ JSON under benchmarks/results/ for EXPERIMENTS.md.
 ``--smoke`` runs every benchmark at one tiny shape (interpret mode on this
 container) without touching the persisted JSON results — a CI-grade check
 that no benchmark has silently rotted.
+
+``--trace PATH`` installs a global :class:`repro.obs.trace.TraceRecorder`
+for the run (autotune measurement spans ride it) and writes a Chrome
+trace_event JSON; ``--metrics-out PATH`` writes a typed metrics snapshot
+of the run itself (rows emitted, failures, per-row latency histogram).
+Both artifacts conform to ``python -m repro.obs.validate``.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
 
@@ -72,26 +79,60 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-shape pass over every benchmark; no JSON "
                          "results are written")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a typed metrics snapshot of the run")
     args = ap.parse_args()
     names = args.only or BENCHES
+
+    from repro.obs import (
+        NULL_RECORDER, MetricsRegistry, TraceRecorder, set_recorder,
+    )
+
+    rec = NULL_RECORDER
+    if args.trace:
+        rec = TraceRecorder()
+        set_recorder(rec)
+    reg = MetricsRegistry()
+    c_rows = reg.counter("bench_rows", "CSV rows emitted across benchmarks")
+    c_fail = reg.counter("bench_failures", "benchmark modules that raised")
+    h_row = reg.histogram(
+        "bench_row_us", "per-row us_per_call",
+        buckets=(10.0, 100.0, 1e3, 1e4, 1e5, 1e6),
+    )
 
     print("name,us_per_call,derived")
     failures = []
     for name in names:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            if args.smoke:
-                if "smoke" not in inspect.signature(mod.run).parameters:
-                    raise TypeError(f"{name}.run() lacks a smoke=... param")
-                rows = mod.run(smoke=True)
-            else:
-                rows = mod.run()
+            with rec.span("bench", bench=name):
+                if args.smoke:
+                    if "smoke" not in inspect.signature(mod.run).parameters:
+                        raise TypeError(f"{name}.run() lacks a smoke=... param")
+                    rows = mod.run(smoke=True)
+                else:
+                    rows = mod.run()
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}")
+                c_rows.inc()
+                h_row.observe(float(us))
             sys.stdout.flush()
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
+            c_fail.inc()
             traceback.print_exc()
+    if args.trace:
+        rec.save(args.trace)
+        print(f"[bench] trace: {args.trace} "
+              f"({len(rec.events)} events, {rec.dropped} dropped)",
+              file=sys.stderr)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(reg.snapshot(), f, indent=1)
+        print(f"[bench] metrics: {args.metrics_out}", file=sys.stderr)
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

@@ -63,6 +63,12 @@ def main() -> None:
                     default=None,
                     help="block-size autotuning mode (sets REPRO_TUNE; "
                          "default: inherit the environment)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(per-step data/fwd_bwd spans, checkpoint and "
+                         "rollback instants; Perfetto-loadable)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a typed metrics snapshot of the run")
     args = ap.parse_args()
 
     if args.tune:
@@ -123,21 +129,41 @@ def main() -> None:
         z_threshold=args.anomaly_z or 8.0,
         max_rollbacks=args.max_rollbacks,
     )
+    rec = None
+    if args.trace:
+        from repro.obs import TraceRecorder, set_recorder
+
+        rec = TraceRecorder()
+        set_recorder(rec)  # autotune measurement spans ride the global
+
     trainer = Trainer(cfg, opt_cfg, data, workdir=args.workdir, mesh=mesh,
                       seed=args.seed, ckpt_every=args.ckpt_every,
-                      anomaly=anomaly)
+                      anomaly=anomaly, trace=rec)
+    source = trainer
     if args.supervise > 0:
         from repro.train.supervisor import TrainSupervisor
 
         sup = TrainSupervisor(trainer, num_workers=args.supervise,
-                              model_parallel=args.model_parallel)
+                              model_parallel=args.model_parallel, trace=rec)
         hist = sup.run(args.steps)
         print(f"[train] supervisor counters: {sup.counters_snapshot()}")
+        source = sup
     else:
         hist = trainer.run(args.steps)
     if hist:
         print(f"[train] done: loss {hist[0]['loss']:.4f} → {hist[-1]['loss']:.4f} "
               f"over {len(hist)} steps")
+    if rec is not None:
+        rec.save(args.trace)
+        print(f"[train] trace: {args.trace} ({len(rec.events)} events)")
+    if args.metrics_out:
+        import json
+
+        from repro.obs import train_registry
+
+        with open(args.metrics_out, "w") as f:
+            json.dump(train_registry(source).snapshot(), f, indent=1)
+        print(f"[train] metrics: {args.metrics_out}")
 
 
 if __name__ == "__main__":

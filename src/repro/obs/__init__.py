@@ -1,0 +1,68 @@
+"""Unified observability layer: tracing, typed metrics, roofline utilization.
+
+Zero-dependency (stdlib only) so every layer — kernels/tune, serve, cluster,
+train, launch, benchmarks — can emit without import cycles or new wheels:
+
+  * :mod:`repro.obs.clock` — the ONE wall-clock source for serve/train time
+    reads; everything else takes an injectable ``clock`` (tick clocks in the
+    chaos suites) and defaults to it.
+  * :mod:`repro.obs.trace` — bounded ring-buffer :class:`TraceRecorder` with
+    nested sync spans, async request-lifecycle spans, and instant events,
+    exported as Chrome ``trace_event`` JSON (Perfetto-loadable).  A process-
+    global recorder (default: no-op) lets deep layers (autotuner sweeps)
+    emit without threading a parameter through every constructor.
+  * :mod:`repro.obs.metrics` — typed registry (counters / gauges / fixed-
+    bucket histograms) that *wraps* the frozen counter schemas
+    (``lifecycle.COUNTER_KEYS``, ``cluster.ROUTER_COUNTER_KEYS``,
+    ``train.elastic.COUNTER_KEYS``) behind pull-style bindings; Prometheus
+    text exposition + JSON snapshot.
+  * :mod:`repro.obs.utilization` — joins measured timings against the
+    roofline cost models (roofline.analysis) into an achieved-fraction-of-
+    roofline column, gated by benchmarks/regress.py.
+  * :mod:`repro.obs.validate` — schema validators for the exported trace /
+    metrics artifacts (CI runs them on the bench-smoke exports).
+"""
+from repro.obs.clock import perf_clock, resolve_clock
+from repro.obs.trace import (
+    NULL_RECORDER,
+    NullRecorder,
+    TraceRecorder,
+    get_recorder,
+    set_recorder,
+    use_recorder,
+)
+from repro.obs.metrics import (
+    MetricsRegistry,
+    STEP_TIME_BUCKETS_S,
+    TPOT_BUCKETS_S,
+    TTFT_BUCKETS_S,
+    router_registry,
+    serving_registry,
+    train_registry,
+)
+from repro.obs.utilization import (
+    achieved_fraction,
+    roofline_lower_bound_s,
+    utilization_columns,
+)
+
+__all__ = [
+    "perf_clock",
+    "resolve_clock",
+    "TraceRecorder",
+    "NullRecorder",
+    "NULL_RECORDER",
+    "get_recorder",
+    "set_recorder",
+    "use_recorder",
+    "MetricsRegistry",
+    "TTFT_BUCKETS_S",
+    "TPOT_BUCKETS_S",
+    "STEP_TIME_BUCKETS_S",
+    "serving_registry",
+    "router_registry",
+    "train_registry",
+    "roofline_lower_bound_s",
+    "achieved_fraction",
+    "utilization_columns",
+]

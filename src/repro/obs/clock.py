@@ -1,0 +1,23 @@
+"""The single wall-clock source for serve/train time reads.
+
+Every serve/train component takes an injectable ``clock`` (the chaos suites
+inject tick clocks so deadlines, TTFT, and trace timestamps are
+deterministic) and defaults to :data:`perf_clock` via :func:`resolve_clock`.
+No other module under ``src/repro/serve`` or ``src/repro/train`` may call
+``time.perf_counter()`` / ``time.monotonic()`` / ``time.time()`` directly —
+a bare read there would bypass injection and make trace timestamps
+non-deterministic under fault injection.  tests/test_obs.py enforces this
+with a source scan whitelisting only this module (plus the tune/ measurement
+harness and benchmarks/, which time *hardware*, not lifecycle events).
+"""
+from __future__ import annotations
+
+import time
+
+#: The production clock: monotonic, sub-µs resolution, not wall-time-adjusted.
+perf_clock = time.perf_counter
+
+
+def resolve_clock(clock):
+    """``clock or perf_clock`` without treating a falsy callable as unset."""
+    return perf_clock if clock is None else clock

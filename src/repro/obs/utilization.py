@@ -1,0 +1,64 @@
+"""Measured-vs-roofline utilization: the column that makes "fast as the
+hardware allows" a tracked number instead of an assertion.
+
+``roofline/analysis.py`` carries the model side — per-call FLOP and HBM-byte
+costs plus the TPU v5e hardware constants.  This module joins a *measured*
+time against that model:
+
+  lower bound  t_roof = max(flops / PEAK_FLOPS, bytes / HBM_BW)
+  utilization  u      = t_roof / t_measured          (achieved fraction)
+
+``u`` close to 1.0 means the kernel runs at the binding roofline term;
+``u`` > 1.0 means the cost model under-counts (a model bug worth failing
+on).  On the CPU interpreter the fractions are tiny but still meaningful as
+a *band*: regress.py keys its utilization bounds per-backend, so the
+interpreter rows get (floor > 0, ceiling ≤ 1) while real-TPU rows can carry
+tight floors (ROADMAP: the real-TPU validation sweep re-anchors here).
+
+``utilization_columns`` is the benchmark-writer helper: it turns one
+roofline cost dict (e.g. ``decode_attention_cost(...)``) plus a measured
+microsecond timing into the stamped record columns.
+"""
+from __future__ import annotations
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def roofline_lower_bound_s(flops: float, hbm_bytes: float, *,
+                           peak_flops: float = PEAK_FLOPS,
+                           hbm_bw: float = HBM_BW) -> float:
+    """Minimum achievable seconds: the slower of the compute and memory
+    terms (the classic roofline ridge)."""
+    if flops < 0 or hbm_bytes < 0:
+        raise ValueError("flops/bytes must be non-negative")
+    return max(flops / peak_flops, hbm_bytes / hbm_bw)
+
+
+def achieved_fraction(measured_s: float, flops: float, hbm_bytes: float, *,
+                      peak_flops: float = PEAK_FLOPS,
+                      hbm_bw: float = HBM_BW) -> float:
+    """Fraction of the roofline lower bound actually achieved (0..1 on a
+    correct cost model; >1 flags the model, not the kernel)."""
+    if measured_s <= 0:
+        raise ValueError(f"measured_s must be positive, got {measured_s}")
+    bound = roofline_lower_bound_s(flops, hbm_bytes,
+                                   peak_flops=peak_flops, hbm_bw=hbm_bw)
+    return bound / measured_s
+
+
+def utilization_columns(cost: dict, measured_us: float) -> dict:
+    """Benchmark-record columns from a roofline cost dict + measured µs.
+
+    ``cost`` is any analysis.py cost dict carrying ``total_flops`` and
+    ``hbm_bytes`` (decode_attention_cost, paged_decode_attention_cost).
+    """
+    flops = float(cost["total_flops"])
+    hbm_bytes = float(cost["hbm_bytes"])
+    bound_s = roofline_lower_bound_s(flops, hbm_bytes)
+    return {
+        "roofline_flops": flops,
+        "roofline_hbm_bytes": hbm_bytes,
+        "roofline_lower_bound_us": bound_s * 1e6,
+        "roofline_util": achieved_fraction(measured_us * 1e-6, flops,
+                                           hbm_bytes),
+    }

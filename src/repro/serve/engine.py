@@ -29,7 +29,6 @@ timing sweeps run once here, never inside a serving step.
 from __future__ import annotations
 
 import itertools
-import time
 from collections import Counter
 from dataclasses import dataclass, field
 
@@ -37,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.clock import resolve_clock
+from repro.obs.trace import get_recorder
 from repro.serve import kv_cache, lifecycle
 from repro.serve.degrade import DegradationController, DegradeConfig
 from repro.serve.faults import NULL_INJECTOR
@@ -98,7 +99,8 @@ class ServeEngine:
     def __init__(self, cfg, params, *, max_slots: int = 8, max_len: int = 512,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
                  seed: int = 0, mesh=None, clock=None, max_waiting=None,
-                 degrade: DegradeConfig | None = None, faults=None):
+                 degrade: DegradeConfig | None = None, faults=None,
+                 trace=None):
         """``mesh``: optional device mesh.  When it carries the axis named
         by ``cfg.attention.context_axis``, long-prompt prefill (sequence ≥
         ring size × 128) runs ring sequence-parallel attention
@@ -118,12 +120,15 @@ class ServeEngine:
         self.top_k = top_k
         self.top_p = top_p
         self.mesh = mesh
-        self.clock = clock or time.perf_counter
+        self.clock = resolve_clock(clock)
         self.max_waiting = max_waiting
         if isinstance(degrade, DegradeConfig):
             degrade = DegradationController(degrade)
         self.degrade = degrade
         self.faults = faults or NULL_INJECTOR
+        self.trace = trace if trace is not None else get_recorder()
+        self._tns = self.trace.ns()  # async-span id namespace (obs.trace)
+        self._last_degrade_level = 0
         self.counters: Counter = Counter()
         self._clock_offset = 0.0  # advanced only by the slow_step fault
         self._step_tries: dict[int, int] = {}  # uid → faulting-step retries
@@ -169,11 +174,14 @@ class ServeEngine:
         req = Request(next(self._uid), list(prompt), max_new_tokens, eos_id,
                       deadline_ttft=deadline_ttft, deadline_e2e=deadline_e2e)
         now = self._now()
+        self.trace.begin("request", f"{self._tns}:{req.uid}", uid=req.uid,
+                         prompt_len=len(req.prompt), max_new=max_new_tokens)
         if (self.max_waiting is not None
                 and len(self.pending) >= self.max_waiting):
             # Load shedding, reject-newest: accepted requests keep their
             # latency bound; the verdict is immediate (req.status).
             self.counters["shed"] += 1
+            self.trace.instant("shed", uid=req.uid)
             self._terminal(req, lifecycle.REJECTED, now, t_submit=now)
             return req.uid
         self.pending.append(req)
@@ -204,6 +212,10 @@ class ServeEngine:
         if t_submit is not None:
             self._t_submit.setdefault(req.uid, t_submit)
         self._finish_metrics(req, now)
+        # End-event args ARE the metrics row: the trace reconstructs the
+        # terminal status / timings bit-consistently with metrics().
+        self.trace.end("request", f"{self._tns}:{req.uid}",
+                       **self._metric_records[req.uid])
         self.finished.append(req)
 
     def _release_slot(self, slot: int) -> None:
@@ -263,6 +275,9 @@ class ServeEngine:
             # runs once per step) keeps the hysteresis tick-domain.
             level = self.degrade.observe(len(self.pending))
             group = self.degrade.cfg.group_for(level)
+            if level != self._last_degrade_level:
+                self.trace.instant("degrade_level", level=level, group=group)
+                self._last_degrade_level = level
         for slot in self._free_slots():
             if not self.pending:
                 break
@@ -289,7 +304,8 @@ class ServeEngine:
             toks[0, :n] = req.prompt
             # Long-prompt prefill rides the context-parallel ring when the
             # engine has a mesh (trace-time dispatch in core.api.attend).
-            with maybe_set_mesh(self.mesh):
+            with self.trace.span("prefill", uid=req.uid, bucket=bucket,
+                                 group=group), maybe_set_mesh(self.mesh):
                 logits, cache1 = self._prefill_fn(bucket, group)(
                     self.params, jnp.asarray(toks)
                 )
@@ -382,9 +398,10 @@ class ServeEngine:
                     done_now.append(req)
                 return done_now
         self._rng, sub = jax.random.split(self._rng)
-        logits, self.cache = self._decode(
-            self.params, self.tokens, self.cache, step_pos
-        )
+        with self.trace.span("decode", n_active=len(self.active)):
+            logits, self.cache = self._decode(
+                self.params, self.tokens, self.cache, step_pos
+            )
         # Per-slot numeric health guard: one device-side reduce + a tiny
         # host transfer; a non-finite row quarantines exactly that slot.
         nan_slots = {
@@ -422,6 +439,7 @@ class ServeEngine:
             req.generated.append(t)
             if len(req.generated) == 1:
                 self._t_first[req.uid] = now
+                self.trace.instant("first_token", uid=req.uid)
             limit = len(req.generated) >= req.max_new_tokens
             hit_eos = req.eos_id is not None and t == req.eos_id
             full = (not sliding) and int(self.pos[slot]) >= self.max_len - 2
@@ -548,7 +566,7 @@ class PagedServeEngine:
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
                  seed: int = 0, cache_dtype=jnp.bfloat16, clock=None,
                  max_waiting=None, degrade: DegradeConfig | None = None,
-                 faults=None, mesh=None):
+                 faults=None, mesh=None, trace=None):
         from repro.serve import paged
         from repro.serve.scheduler import Scheduler, SchedulerConfig
         from repro.serve.serve_step import make_paged_step
@@ -610,12 +628,13 @@ class PagedServeEngine:
         )
         self.prefill_chunk = min(prefill_chunk, max_len)
         self.faults = faults or NULL_INJECTOR
+        self.trace = trace if trace is not None else get_recorder()
         self.scheduler = Scheduler(
             SchedulerConfig(
                 max_batch=max_batch, prefill_chunk=self.prefill_chunk,
                 token_budget=token_budget, max_waiting=max_waiting,
             ),
-            degrade=degrade, faults=self.faults,
+            degrade=degrade, faults=self.faults, trace=self.trace,
             **({"clock": clock} if clock is not None else {}),
         )
         self._decode = jax.jit(make_paged_step(cfg, 1))

@@ -75,12 +75,13 @@ and tests/test_chaos.py fake the engine).
 """
 from __future__ import annotations
 
-import time
 from collections import Counter, deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs.clock import resolve_clock
+from repro.obs.trace import get_recorder
 from repro.serve.degrade import DegradationController, DegradeConfig
 from repro.serve.faults import NULL_INJECTOR, InjectedFault
 from repro.serve import lifecycle
@@ -159,15 +160,17 @@ class Entry:
 class Scheduler:
     """FCFS continuous batching with chunked prefill and preemption."""
 
-    def __init__(self, cfg: SchedulerConfig, *, clock=time.perf_counter,
+    def __init__(self, cfg: SchedulerConfig, *, clock=None,
                  degrade: DegradeConfig | DegradationController | None = None,
-                 faults=NULL_INJECTOR):
+                 faults=NULL_INJECTOR, trace=None):
         self.cfg = cfg
-        self.clock = clock
+        self.clock = resolve_clock(clock)
         if isinstance(degrade, DegradeConfig):
             degrade = DegradationController(degrade)
         self.degrade = degrade
         self.faults = faults
+        self.trace = trace if trace is not None else get_recorder()
+        self._tns = self.trace.ns()  # async-span id namespace (obs.trace)
         self.waiting: deque[Entry] = deque()
         self.running: dict[int, Entry] = {}  # lane → entry
         self.done: list[Entry] = []
@@ -179,6 +182,7 @@ class Scheduler:
         self._clock_offset = 0.0
         self._stall_ticks = 0
         self._level = 0  # degradation level chosen this tick
+        self._last_level = 0  # last level a degrade_level instant recorded
 
     def _now(self) -> float:
         return self.clock() + self._clock_offset
@@ -192,12 +196,18 @@ class Scheduler:
         learns the verdict immediately from ``req.status``."""
         e = Entry(req=req)
         e.metrics.t_submit = self._now()
+        self.trace.begin("request", f"{self._tns}:{e.uid}", uid=e.uid,
+                         prompt_len=len(req.prompt),
+                         max_new=req.max_new_tokens)
         if (self.cfg.max_waiting is not None
                 and len(self.waiting) >= self.cfg.max_waiting):
             self.counters["shed"] += 1
+            self.trace.instant("shed", uid=e.uid)
             e.metrics.t_done = e.metrics.t_submit
             req.status = lifecycle.REJECTED
             self.done.append(e)
+            self.trace.end("request", f"{self._tns}:{e.uid}",
+                           **self._metric_row(e))
             return None
         req.status = lifecycle.QUEUED
         self.waiting.append(e)
@@ -224,19 +234,22 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    def _metric_row(self, e: Entry) -> dict:
+        """The per-request metrics row.  ONE builder feeds both metrics()
+        and the trace's async end-event args, so the exported trace is
+        bit-consistent with metrics() by construction."""
+        return {
+            "uid": e.uid,
+            "ttft_s": e.metrics.ttft,
+            "tpot_s": e.metrics.tpot(len(e.req.generated)),
+            "n_generated": len(e.req.generated),
+            "n_preemptions": e.metrics.n_preemptions,
+            "status": getattr(e.req, "status", lifecycle.DONE),
+            "degrade_group": getattr(e.req, "degrade_group", 1),
+        }
+
     def metrics(self) -> list[dict]:
-        out = []
-        for e in self.done:
-            out.append({
-                "uid": e.uid,
-                "ttft_s": e.metrics.ttft,
-                "tpot_s": e.metrics.tpot(len(e.req.generated)),
-                "n_generated": len(e.req.generated),
-                "n_preemptions": e.metrics.n_preemptions,
-                "status": getattr(e.req, "status", lifecycle.DONE),
-                "degrade_group": getattr(e.req, "degrade_group", 1),
-            })
-        return out
+        return [self._metric_row(e) for e in self.done]
 
     # -- termination ----------------------------------------------------
 
@@ -252,6 +265,8 @@ class Scheduler:
         e.req.status = status
         e.metrics.t_done = self._now()
         self.done.append(e)
+        self.trace.end("request", f"{self._tns}:{e.uid}",
+                       **self._metric_row(e))
 
     def _fail(self, e: Entry, engine, kind: str, finished: list) -> None:
         self._finalize(e, engine, lifecycle.FAILED)
@@ -337,6 +352,7 @@ class Scheduler:
         victim.evicted = True
         victim.req.status = lifecycle.PREEMPTED
         victim.metrics.n_preemptions += 1
+        self.trace.instant("preempt", uid=victim.uid)
         if victim.lane is not None:
             del self.running[victim.lane]
             victim.lane = None
@@ -374,6 +390,7 @@ class Scheduler:
         head.req.generated.append(tok)
         head.next_token = tok
         head.metrics.t_first_token = self._now()
+        self.trace.instant("first_token", uid=head.uid)
         # The first token may already satisfy the stop conditions
         # (max_new_tokens=1 / eos): finish without a decode tick —
         # the slot engine's contract, and one saved decode.
@@ -420,6 +437,9 @@ class Scheduler:
             self._level = self.degrade.observe(
                 len(self.waiting), self._ttft_p50()
             )
+            if self._level != self._last_level:
+                self.trace.instant("degrade_level", level=self._level)
+                self._last_level = self._level
 
         budget = self.cfg.budget()
         budget -= len(self.running)  # decode phase reserved first
@@ -468,6 +488,7 @@ class Scheduler:
                 head.evicted = False
                 head.restore_tries = 0
                 progressed = True
+                self.trace.instant("restore", uid=head.uid)
                 if head.prompt_done == len(head.req.prompt):
                     head.req.status = lifecycle.RUNNING
                     head.lane = engine.free_lane()
@@ -514,6 +535,7 @@ class Scheduler:
                 head.prompt_done = n
                 head.length = n
                 self.counters["mesh_prefills"] += 1
+                self.trace.instant("mesh_prefill", uid=head.uid, n=n)
                 budget -= n
                 progressed = True
                 self._finish_prompt(engine, head, row, finished)
@@ -543,6 +565,8 @@ class Scheduler:
                 head.length = n
                 head.req.degrade_group = group
                 self.counters["degraded_prefills"] += 1
+                self.trace.instant("degraded_prefill", uid=head.uid,
+                                   group=group)
                 budget -= n
                 progressed = True
                 self._finish_prompt(engine, head, row, finished)
@@ -603,7 +627,8 @@ class Scheduler:
                     )
             if self.running:
                 try:
-                    out = engine.decode_tick(self.running)
+                    with self.trace.span("decode", n_lanes=len(self.running)):
+                        out = engine.decode_tick(self.running)
                     # Engines return (tokens, ok_mask); legacy fakes
                     # returning bare tokens get an all-healthy mask.
                     if isinstance(out, tuple):
@@ -673,6 +698,7 @@ class Scheduler:
                     victim = self.waiting.popleft()
                 else:
                     victim = min(self.running.values(), key=lambda x: x.uid)
+                self.trace.instant("watchdog", uid=victim.uid)
                 self._fail(victim, engine, "watchdog_fails", finished)
                 self._stall_ticks = 0
         return finished

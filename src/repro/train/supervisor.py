@@ -37,6 +37,7 @@ from __future__ import annotations
 from collections import Counter
 
 from repro.faults import NULL_INJECTOR
+from repro.obs.trace import get_recorder
 from repro.train.elastic import (
     COUNTER_KEYS,
     FailureDetector,
@@ -74,6 +75,7 @@ class TrainSupervisor:
         base_step_time: float = 1.0,
         faults=None,
         clock=None,
+        trace=None,
     ):
         if num_workers < 1:
             raise ValueError("need at least one worker")
@@ -83,6 +85,7 @@ class TrainSupervisor:
         self.base_step_time = base_step_time
         self.faults = faults or NULL_INJECTOR
         self.clock = clock or (lambda: float(self.ticks))
+        self.trace = trace if trace is not None else get_recorder()
         self.ticks = 0
         self.counters: Counter = Counter()
         self.detector = FailureDetector(
@@ -134,6 +137,8 @@ class TrainSupervisor:
             "dead": sorted(dead), "survivors": survivors,
             "mesh": self.mesh_plan[0], "restored_step": restored,
         })
+        self.trace.instant("remesh", tick=self.ticks, dead=sorted(dead),
+                           survivors=len(survivors), restored_step=restored)
         print(
             f"[supervisor] tick {self.ticks}: workers {sorted(dead)} lost; "
             f"remeshed to {self.mesh_plan[0]} over {len(survivors)} "
@@ -155,6 +160,7 @@ class TrainSupervisor:
                     "tick": self.ticks, "t": self.clock(),
                     "kind": "worker_loss", "worker": w,
                 })
+                self.trace.instant("worker_loss", tick=self.ticks, worker=w)
         # 2) step-time reports from workers that are still responsive
         step_times = {}
         for w in self.detector.alive:
@@ -176,6 +182,8 @@ class TrainSupervisor:
                 "tick": self.ticks, "t": self.clock(),
                 "kind": "straggler_excluded", "worker": w,
             })
+            self.trace.instant("straggler_excluded", tick=self.ticks,
+                               worker=w)
         # 3) heartbeats + death detection
         for w in step_times:
             if w not in self.lost:

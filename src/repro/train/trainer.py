@@ -31,7 +31,6 @@ Fault-tolerance model (DESIGN.md §Training robustness):
 """
 from __future__ import annotations
 
-import time
 from collections import Counter
 
 import jax
@@ -40,6 +39,8 @@ import numpy as np
 
 from repro.distributed import sharding as shd
 from repro.faults import NULL_INJECTOR
+from repro.obs.clock import resolve_clock
+from repro.obs.trace import get_recorder
 from repro.models import lm
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt_mod
@@ -83,6 +84,8 @@ class Trainer:
         nan_policy: str = "skip",  # skip | halt
         anomaly: AnomalyConfig | None = None,
         faults=None,
+        clock=None,
+        trace=None,
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -95,6 +98,8 @@ class Trainer:
         self.nan_policy = nan_policy
         self.anomaly = anomaly or AnomalyConfig()
         self.faults = faults or NULL_INJECTOR
+        self.clock = resolve_clock(clock)
+        self.trace = trace if trace is not None else get_recorder()
         self.ckpt_dir = os.path.join(workdir, "checkpoints")
         os.makedirs(self.ckpt_dir, exist_ok=True)
 
@@ -168,6 +173,7 @@ class Trainer:
             faults=self.faults,
         )
         self._ckpts_written += 1
+        self.trace.instant("ckpt", step=self.step, tag=tag)
 
     def counters_snapshot(self) -> dict:
         """Robustness counters, zero-filled to the frozen schema
@@ -206,6 +212,7 @@ class Trainer:
             self._rollback_streak = 0
         if self._rollback_streak >= self.anomaly.max_rollbacks:
             self.counters["anomaly_halts"] += 1
+            self.trace.instant("anomaly_halt", step=self.step)
             self._checkpoint(tag="anomaly-halt")
             raise AnomalyHalt(
                 self.step, self._rollback_streak,
@@ -216,6 +223,7 @@ class Trainer:
         self.counters["rollbacks"] += 1
         at = self.step
         restored = self.restore_from_checkpoint(restore_data=False)
+        self.trace.instant("rollback", at=at, restored=restored)
         print(
             f"[trainer] anomaly at step {at} (loss {loss:.4g}, {report}): "
             f"rolled back to step {restored}, data stream advanced past "
@@ -228,7 +236,12 @@ class Trainer:
         """One training step with all guards.  Returns the history record,
         or None when the step was consumed by an anomaly rollback (``step``
         then rewound to the restored checkpoint)."""
-        batch = self.dataset.next_batch()
+        with self.trace.span("train/step", step=self.step):
+            return self._step_once_inner()
+
+    def _step_once_inner(self) -> dict | None:
+        with self.trace.span("data", step=self.step):
+            batch = self.dataset.next_batch()
         if self.faults.fires("data_shard_corrupt") is not None:
             batch = _scramble_labels(batch, self.step, self.cfg.vocab)
             self.counters["data_corrupt_batches"] += 1
@@ -238,12 +251,13 @@ class Trainer:
             if self.faults.fires("nan_grad") is not None
             else 0.0
         )
-        t0 = time.perf_counter()
+        t0 = self.clock()
         # The mesh context is what lets trace-time dispatch see the
         # mesh: sharding constraints in the model and the ring
         # context-parallel attention (core.api._active_context_mesh)
         # both read the active mesh.
-        with maybe_set_mesh(self.mesh):
+        with self.trace.span("fwd_bwd", step=self.step), \
+                maybe_set_mesh(self.mesh):
             new_params, new_opt, metrics = self._step_fn(
                 self.params, self.opt_state, batch,
                 jnp.asarray(self.step, jnp.int32),
@@ -261,6 +275,7 @@ class Trainer:
         if skipped:
             # update was suppressed inside the jitted step (NaN guard)
             self.counters["nan_skips"] += 1
+            self.trace.instant("nan_skip", step=self.step)
             if self.nan_policy == "halt":
                 self._checkpoint(tag="nan-halt")
                 raise FloatingPointError(f"NaN loss at step {self.step}")
@@ -270,7 +285,7 @@ class Trainer:
             if report is not None:
                 self._rollback_or_halt(loss, report)
                 return None
-        dt = time.perf_counter() - t0
+        dt = self.clock() - t0
         self.step += 1
         rec = {"step": self.step, "loss": loss,
                "grad_norm": gnorm,
@@ -305,6 +320,7 @@ class Trainer:
             try:
                 self._checkpoint(tag="emergency")
                 self.counters["emergency_saves"] += 1
+                self.trace.instant("emergency_save", step=self.step)
             except Exception as save_err:  # noqa: BLE001
                 self.counters["emergency_save_failures"] += 1
                 print(

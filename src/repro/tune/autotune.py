@@ -24,6 +24,7 @@ import functools
 import os
 
 from repro.core.block_size import enumerate_block_sizes, select_block_sizes
+from repro.obs.trace import get_recorder
 from repro.tune.block_sizes import BlockSizes
 from repro.tune.cache import TuneCache, cache_key, seq_bucket
 from repro.tune.measure import Timer, measure_candidates, wall_timer
@@ -509,8 +510,20 @@ class Autotuner:
         entry = self.cache.get(key)
         if entry is not None:
             return entry
-        table = measure_candidates(make_run_thunk(), candidates, self._timer())
+        # Sweeps ride the global recorder: the autotuner has no constructor
+        # injection path, and --trace runs want tuned picks in the trace.
+        rec = get_recorder()
+        with rec.span("tune/measure", kernel=kernel,
+                      n_candidates=len(candidates)):
+            table = measure_candidates(
+                make_run_thunk(), candidates, self._timer()
+            )
         best = min(table, key=lambda c: table[c])
+        rec.instant(
+            "tune/pick", kernel=kernel,
+            best=list(best) if isinstance(best, tuple) else int(best),
+            seconds=table[best],
+        )
         entry = {
             "kernel": kernel,
             "best": list(best) if isinstance(best, tuple) else int(best),
